@@ -1,0 +1,55 @@
+"""Paper Table 1: cycle time (ms) per topology x network x dataset.
+
+Reproduces the wall-clock table with the Eq. 3/4/5 simulator over 6,400
+communication rounds (the paper's setting) — pure simulation, fast.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.delay import WORKLOADS
+from repro.core.simulator import simulate
+from repro.networks.zoo import NETWORKS
+
+TOPOLOGIES = ["star", "matcha", "matcha_plus", "mst", "dmbst", "ring",
+              "multigraph"]
+# Paper Table 1 values (FEMNIST / iNaturalist / Sentiment140 blocks) for
+# the reduction-vs-RING validation.
+PAPER_RING_REDUCTION = {
+    ("femnist", "gaia"): 3.6, ("femnist", "amazon"): 1.5,
+    ("femnist", "geant"): 2.3, ("femnist", "exodus"): 2.0,
+    ("femnist", "ebone"): 1.5,
+    ("inaturalist", "gaia"): 1.7, ("inaturalist", "amazon"): 1.0,
+    ("inaturalist", "geant"): 1.6, ("inaturalist", "exodus"): 1.7,
+    ("inaturalist", "ebone"): 1.5,
+    ("sentiment140", "gaia"): 2.5, ("sentiment140", "amazon"): 1.1,
+    ("sentiment140", "geant"): 1.8, ("sentiment140", "exodus"): 1.8,
+    ("sentiment140", "ebone"): 1.5,
+}
+
+
+def run(num_rounds: int = 6400, quick: bool = False):
+    """Yields CSV rows: name,us_per_call,derived."""
+    workloads = ["femnist"] if quick else list(WORKLOADS)
+    networks = ["gaia", "geant"] if quick else list(NETWORKS)
+    rows = []
+    for wl_name in workloads:
+        wl = WORKLOADS[wl_name]
+        for net_name in networks:
+            from repro.networks.zoo import get_network
+            net = get_network(net_name)
+            cycle = {}
+            for topo in TOPOLOGIES:
+                t0 = time.perf_counter()
+                rep = simulate(topo, net, wl, num_rounds=num_rounds)
+                us = (time.perf_counter() - t0) * 1e6
+                cycle[topo] = rep.mean_cycle_ms
+                rows.append((f"table1/{wl_name}/{net_name}/{topo}", us,
+                             f"cycle_ms={rep.mean_cycle_ms:.2f}"))
+            red = cycle["ring"] / cycle["multigraph"]
+            paper = PAPER_RING_REDUCTION.get((wl_name, net_name))
+            rows.append((f"table1/{wl_name}/{net_name}/reduction_vs_ring",
+                         0.0,
+                         f"ours={red:.2f}x paper={paper}x"))
+    return rows

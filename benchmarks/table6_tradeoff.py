@@ -1,0 +1,42 @@
+"""Paper Table 6: the t knob (max edges per pair) trades cycle time
+
+against accuracy; t=1 degenerates to the RING overlay; cycle time
+saturates around t~8 while too-large t hurts accuracy (isolated nodes
+overfit locally)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.delay import FEMNIST
+from repro.core.simulator import simulate_multigraph
+from repro.fl.trainer import FLConfig, run_fl
+from repro.networks.zoo import get_network
+
+# paper Table 6 (exodus): t -> (cycle ms, acc %)
+PAPER = {1: (24.7, 71.05), 3: (13.5, 71.08), 5: (12.1, 71.13),
+         8: (11.9, 69.27), 10: (11.9, 69.27)}
+
+
+def run(num_rounds: int = 120, quick: bool = False, network: str = "gaia",
+        train: bool = True):
+    rows = []
+    net = get_network(network)
+    ts = [1, 3, 5, 8] if quick else [1, 3, 5, 8, 10, 20]
+    for t in ts:
+        t0 = time.perf_counter()
+        sim = simulate_multigraph(net, FEMNIST, t=t, num_rounds=6400)
+        derived = f"cycle_ms={sim.mean_cycle_ms:.2f}"
+        if train:
+            cfg = FLConfig(dataset="femnist", network=network,
+                           topology="multigraph", t=t, rounds=num_rounds,
+                           eval_every=num_rounds, samples_per_silo=64,
+                           batch_size=16, lr=0.05, seed=0)
+            res = run_fl(cfg)
+            derived += f" acc={res.final_acc():.4f}"
+        us = (time.perf_counter() - t0) * 1e6
+        paper = PAPER.get(t)
+        if paper:
+            derived += f" paper_cycle={paper[0]} paper_acc={paper[1]}"
+        rows.append((f"table6/{network}/t={t}", us, derived))
+    return rows

@@ -1,0 +1,39 @@
+"""End-to-end driver: federally train a (reduced) assigned LLM
+
+architecture across silos with the multigraph topology, and compare the
+simulated wall-clock against RING — the paper's technique applied to a
+modern model stack.
+
+    PYTHONPATH=src python examples/fl_llm_finetune.py [--arch qwen2-7b]
+"""
+
+import argparse
+
+from repro.launch.train import TrainConfig, run_reduced_fl
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-370m")
+    ap.add_argument("--rounds", type=int, default=60)
+    ap.add_argument("--silos", type=int, default=5)
+    args = ap.parse_args()
+
+    results = {}
+    for topo in ("multigraph", "ring"):
+        cfg = TrainConfig(arch=args.arch, topology=topo, silos=args.silos,
+                          rounds=args.rounds, lr=5e-2)
+        results[topo] = run_reduced_fl(cfg)
+        r = results[topo]
+        print(f"{topo:11s} loss {r['loss_first']:.3f} -> {r['loss_last']:.3f}"
+              f"  sim cycle {r['sim_mean_cycle_ms']:.1f} ms"
+              f"  sim total {r['sim_total_time_s']:.2f} s")
+    m, g = results["multigraph"], results["ring"]
+    print(f"\nwall-clock speedup vs RING: "
+          f"x{g['sim_mean_cycle_ms'] / m['sim_mean_cycle_ms']:.2f} "
+          f"at comparable per-round loss "
+          f"({m['loss_last']:.3f} vs {g['loss_last']:.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Quickstart: build the multigraph, parse its states, and see why it is
+
+faster — isolated nodes skip the blocking aggregation.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import parsing
+from repro.core.delay import FEMNIST, MultigraphDelayTracker
+from repro.core.multigraph import build_multigraph
+from repro.core.simulator import simulate
+from repro.core.topology import ring_topology
+from repro.networks.zoo import get_network
+
+
+def main():
+    net = get_network("gaia")
+    print(f"network: {net.name} with {net.num_silos} silos\n")
+
+    # 1. the overlay (Christofides ring, as in RING [58])
+    overlay = ring_topology(net, FEMNIST).graph
+    print(f"overlay: ring with {overlay.num_pairs} pairs")
+
+    # 2. Algorithm 1: multigraph (long-delay pairs get more weak edges)
+    mg = build_multigraph(net, FEMNIST, overlay, t=5)
+    print("edge multiplicities:", sorted(mg.multiplicity.values()))
+
+    # 3. Algorithm 2: parse into states; find the isolated nodes
+    states = parsing.parse_multigraph(mg)
+    print(f"parsed into {len(states)} states; "
+          f"{sum(s.has_isolated() for s in states)} contain isolated nodes")
+
+    # 4. cycle time per round (Eq. 4/5)
+    tracker = MultigraphDelayTracker(net=net, wl=FEMNIST, overlay=overlay)
+    print("\nround | isolated nodes | cycle time (ms)")
+    for k, st in parsing.state_schedule(states, 12):
+        tau = tracker.round_cycle_time(st)
+        print(f"{k:5d} | {str(st.isolated_nodes()):>14s} | {tau:8.2f}")
+
+    # 5. the headline: average cycle time vs every baseline topology
+    print("\ntopology       mean cycle (ms)")
+    for topo in ["star", "matcha", "mst", "ring", "multigraph"]:
+        rep = simulate(topo, net, FEMNIST, num_rounds=600)
+        print(f"{topo:12s} {rep.mean_cycle_ms:10.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Paper Table 1 in miniature: cycle time of every topology on every
+
+network, FEMNIST workload + the isolated-node statistics of Table 3.
+
+    PYTHONPATH=src python examples/topology_comparison.py [--full]
+"""
+
+import sys
+
+from repro.core.delay import FEMNIST
+from repro.core.simulator import simulate
+from repro.networks.zoo import NETWORKS
+
+
+def main():
+    rounds = 6400 if "--full" in sys.argv else 800
+    topos = ["star", "matcha", "matcha_plus", "mst", "dmbst", "ring",
+             "multigraph"]
+    print(f"mean cycle time (ms) over {rounds} rounds, FEMNIST workload\n")
+    print(f"{'network':10s}" + "".join(f"{t:>13s}" for t in topos))
+    for name in NETWORKS:
+        from repro.networks.zoo import get_network
+        net = get_network(name)
+        row = [f"{name:10s}"]
+        for topo in topos:
+            rep = simulate(topo, net, FEMNIST, num_rounds=rounds)
+            row.append(f"{rep.mean_cycle_ms:13.1f}")
+        print("".join(row))
+    print("\nours vs RING speedup:")
+    for name in NETWORKS:
+        from repro.networks.zoo import get_network
+        net = get_network(name)
+        ours = simulate("multigraph", net, FEMNIST, num_rounds=rounds)
+        ring = simulate("ring", net, FEMNIST, num_rounds=rounds)
+        print(f"  {name:8s} x{ring.mean_cycle_ms / ours.mean_cycle_ms:.2f} "
+              f"(isolated rounds: {ours.rounds_with_isolated}/{rounds})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.checkpoint.ckpt import (latest_step, restore_pytree, save_pytree,
+                                   CheckpointManager)
+
+__all__ = ["save_pytree", "restore_pytree", "latest_step",
+           "CheckpointManager"]

@@ -1,0 +1,143 @@
+"""Msgpack-based pytree checkpointing (orbax is unavailable offline).
+
+Arrays are serialized as (dtype, shape, raw bytes); the tree structure
+is encoded as nested msgpack maps/lists. Atomic writes (tmp + rename),
+step-numbered directories, and a small manager with retention.
+"""
+
+from __future__ import annotations
+
+import os
+import pathlib
+import re
+import shutil
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_ARRAY_KEY = b"__nd__"
+
+
+def _dtype_name(dt: np.dtype) -> str:
+    # ml_dtypes types (bfloat16 etc.) stringify to 'V2' via .str; .name
+    # keeps the real identity.
+    return dt.name
+
+
+def _dtype_from_name(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _pack_leaf(x):
+    arr = np.asarray(x)
+    return {_ARRAY_KEY: True, b"dtype": _dtype_name(arr.dtype),
+            b"shape": list(arr.shape), b"data": arr.tobytes()}
+
+
+def _is_packed(obj) -> bool:
+    return isinstance(obj, dict) and obj.get(_ARRAY_KEY) is True
+
+
+def _unpack_leaf(obj):
+    name = obj[b"dtype"]
+    if isinstance(name, bytes):
+        name = name.decode()
+    arr = np.frombuffer(obj[b"data"], dtype=_dtype_from_name(name))
+    return arr.reshape(obj[b"shape"])
+
+
+def _encode(tree):
+    if isinstance(tree, dict):
+        return {k: _encode(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return {b"__list__": [_encode(v) for v in tree],
+                b"__tuple__": isinstance(tree, tuple)}
+    if tree is None:
+        return {b"__none__": True}
+    if isinstance(tree, (int, float, str, bool)):
+        return {b"__py__": tree}
+    return _pack_leaf(tree)
+
+
+def _decode(obj):
+    if isinstance(obj, dict):
+        if _is_packed(obj):
+            return _unpack_leaf(obj)
+        if b"__none__" in obj:
+            return None
+        if b"__py__" in obj:
+            v = obj[b"__py__"]
+            # only str/int/float/bool are packed here; msgpack(raw=True)
+            # returns str back as bytes
+            return v.decode() if isinstance(v, bytes) else v
+        if b"__list__" in obj:
+            items = [_decode(v) for v in obj[b"__list__"]]
+            return tuple(items) if obj.get(b"__tuple__") else items
+        return {(k.decode() if isinstance(k, bytes) else k): _decode(v)
+                for k, v in obj.items()}
+    return obj
+
+
+def save_pytree(path: str | os.PathLike, tree) -> None:
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    def to_host(x):
+        # only arrays go through device_get; python scalars/strings pass
+        # through so _encode keeps their type
+        if hasattr(x, "dtype") or isinstance(x, (np.ndarray,)):
+            return np.asarray(jax.device_get(x))
+        return x
+
+    host_tree = jax.tree.map(to_host, tree)
+    payload = msgpack.packb(_encode(host_tree), use_bin_type=True)
+    tmp = path.with_suffix(path.suffix + ".tmp")
+    tmp.write_bytes(payload)
+    tmp.rename(path)
+
+
+def restore_pytree(path: str | os.PathLike):
+    payload = pathlib.Path(path).read_bytes()
+    return _decode(msgpack.unpackb(payload, raw=True, strict_map_key=False))
+
+
+_STEP_RE = re.compile(r"^step_(\d+)\.msgpack$")
+
+
+def latest_step(ckpt_dir: str | os.PathLike) -> int | None:
+    d = pathlib.Path(ckpt_dir)
+    if not d.exists():
+        return None
+    steps = [int(m.group(1)) for p in d.iterdir()
+             if (m := _STEP_RE.match(p.name))]
+    return max(steps) if steps else None
+
+
+class CheckpointManager:
+    """Step-numbered checkpoints with retention."""
+
+    def __init__(self, ckpt_dir: str | os.PathLike, keep: int = 3):
+        self.dir = pathlib.Path(ckpt_dir)
+        self.keep = keep
+
+    def path(self, step: int) -> pathlib.Path:
+        return self.dir / f"step_{step}.msgpack"
+
+    def save(self, step: int, tree) -> None:
+        save_pytree(self.path(step), tree)
+        steps = sorted(int(m.group(1)) for p in self.dir.iterdir()
+                       if (m := _STEP_RE.match(p.name)))
+        for s in steps[:-self.keep]:
+            self.path(s).unlink(missing_ok=True)
+
+    def restore(self, step: int | None = None):
+        if step is None:
+            step = latest_step(self.dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        return step, restore_pytree(self.path(step))

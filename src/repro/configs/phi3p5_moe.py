@@ -1,0 +1,13 @@
+"""phi3.5-moe-42b-a6.6b [moe] — 16 experts, top-2 routing.
+
+32L d_model=4096 32H (kv=8) expert d_ff=6400 vocab=32064.
+[hf:microsoft/Phi-3.5-MoE-instruct]"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b", family="moe",
+    num_layers=32, d_model=4096, vocab_size=32064,
+    num_heads=32, num_kv_heads=8, head_dim=128,
+    num_experts=16, experts_per_token=2, expert_d_ff=6400,
+    tie_embeddings=False,
+)

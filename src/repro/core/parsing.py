@@ -1,0 +1,59 @@
+"""Algorithm 2 — Multigraph Parsing.
+
+Parses the multigraph into s_max = LCM({n(i,j)}) simple-graph states.
+State 0 is the overlay (every pair strong). A pair with multiplicity n
+is strong once every n states and weak otherwise, tracked by the dynamic
+countdown list L-bar exactly as in the paper's pseudo-code:
+
+    if Lbar[i,j] == L[i,j]: edge is STRONG else WEAK
+    then: if Lbar[i,j] == 1: Lbar[i,j] = L[i,j]  (reset)
+          else:              Lbar[i,j] -= 1
+
+The schedule cycles: round k uses state (k mod s_max).
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.core.graph import STRONG, WEAK, Multigraph, MultigraphState, Pair
+
+
+def max_states(mg: Multigraph) -> int:
+    """s_max = least common multiple of all pair multiplicities."""
+    s = 1
+    for n in mg.multiplicity.values():
+        s = math.lcm(s, n)
+    return s
+
+
+def parse_multigraph(mg: Multigraph, cap_states: int | None = None) -> list[MultigraphState]:
+    """Algorithm 2: unroll the multigraph into its cyclic list of states.
+
+    ``cap_states`` optionally truncates pathological LCMs (the schedule is
+    cyclic, so training just cycles whatever prefix we materialize; the
+    paper's networks give small LCMs — Table 3 reports 6..60 states).
+    """
+    s_max = max_states(mg)
+    if cap_states is not None:
+        s_max = min(s_max, cap_states)
+    L = dict(mg.multiplicity)
+    Lbar: dict[Pair, int] = dict(L)
+    states: list[MultigraphState] = []
+    for _ in range(s_max):
+        edge_type: dict[Pair, int] = {}
+        for p in mg.pairs:
+            edge_type[p] = STRONG if Lbar[p] == L[p] else WEAK
+            if Lbar[p] == 1:
+                Lbar[p] = L[p]
+            else:
+                Lbar[p] -= 1
+        states.append(MultigraphState(num_nodes=mg.num_nodes, edge_type=edge_type))
+    return states
+
+
+def state_schedule(states: list[MultigraphState], num_rounds: int):
+    """Yield (round, state) cycling through the parsed states."""
+    s = len(states)
+    for k in range(num_rounds):
+        yield k, states[k % s]

@@ -1,0 +1,256 @@
+"""Baseline topology designs: STAR, MST, delta-MBST, RING, MATCHA(+).
+
+Each design consumes a NetworkSpec + Workload and produces, per
+communication round, the set of blocking pair exchanges. Static designs
+(STAR/MST/dMBST/RING) use the same graph every round; MATCHA samples
+matchings each round; the paper's multigraph design lives in
+multigraph.py / parsing.py and is driven by the state schedule.
+
+Edge weights used while CONSTRUCTING a topology are the congestion-free
+pair delays (degree 1): the topology is chosen before the degrees it
+induces are known. Cycle times are then evaluated with the actual
+degrees (delay.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol
+
+import networkx as nx
+import numpy as np
+
+from repro.core.delay import Workload, pair_delay_ms
+from repro.core.graph import Pair, SimpleGraph, canon, make_graph
+from repro.networks.zoo import NetworkSpec
+
+
+def nominal_delay_matrix(net: NetworkSpec, wl: Workload) -> np.ndarray:
+    """Congestion-free (degree-1) pair delay between every silo pair."""
+    n = net.num_silos
+    ones = np.ones(n, dtype=np.int64)
+    d = np.zeros((n, n))
+    for i in range(n):
+        for j in range(i + 1, n):
+            d[i, j] = d[j, i] = pair_delay_ms(net, wl, i, j, ones)
+    return d
+
+
+def connectivity_graph(net: NetworkSpec) -> SimpleGraph:
+    """G_c: possible direct communications — complete graph over silos."""
+    n = net.num_silos
+    return make_graph(n, [(i, j) for i in range(n) for j in range(i + 1, n)])
+
+
+def physical_graph(net: NetworkSpec, k_nearest: int = 4) -> SimpleGraph:
+    """Approximate physical/underlay graph of an ISP network.
+
+    The Internet Topology Zoo publishes physical links; offline we
+    approximate them with a symmetric k-nearest-neighbour graph over the
+    latency metric (plus an MST union so it is always connected). Cloud
+    networks (gaia/amazon) are fully meshed, for which callers should use
+    connectivity_graph instead.
+    """
+    n = net.num_silos
+    lat = net.latency_ms
+    pairs: set[Pair] = set()
+    for i in range(n):
+        order = np.argsort(lat[i])
+        picked = [int(j) for j in order if j != i][:k_nearest]
+        for j in picked:
+            pairs.add(canon(i, j))
+    # Union with the latency MST to guarantee connectivity.
+    g = nx.Graph()
+    for i in range(n):
+        for j in range(i + 1, n):
+            g.add_edge(i, j, weight=float(lat[i, j]))
+    for i, j in nx.minimum_spanning_edges(g, data=False):
+        pairs.add(canon(int(i), int(j)))
+    return make_graph(n, pairs)
+
+
+class TopologyDesign(Protocol):
+    name: str
+
+    def round_graph(self, k: int) -> SimpleGraph:
+        """Active (blocking) exchanges of communication round k."""
+        ...
+
+
+@dataclasses.dataclass
+class StaticTopology:
+    name: str
+    graph: SimpleGraph
+
+    def round_graph(self, k: int) -> SimpleGraph:
+        return self.graph
+
+
+def star_topology(net: NetworkSpec, wl: Workload) -> StaticTopology:
+    """STAR [3]: orchestrator at the hub minimizing the round cycle time."""
+    n = net.num_silos
+    best_hub, best_ct = 0, np.inf
+    for hub in range(n):
+        g = make_graph(n, [(hub, i) for i in range(n) if i != hub])
+        deg = g.degrees()
+        ct = max(pair_delay_ms(net, wl, hub, i, deg) for i in range(n) if i != hub)
+        if ct < best_ct:
+            best_hub, best_ct = hub, ct
+    return StaticTopology(
+        "star", make_graph(n, [(best_hub, i) for i in range(n) if i != best_hub]))
+
+
+def mst_topology(net: NetworkSpec, wl: Workload) -> StaticTopology:
+    """MST [72]: Prim's minimum spanning tree over nominal pair delays."""
+    d = nominal_delay_matrix(net, wl)
+    g = nx.Graph()
+    n = net.num_silos
+    for i in range(n):
+        for j in range(i + 1, n):
+            g.add_edge(i, j, weight=float(d[i, j]))
+    tree = nx.minimum_spanning_tree(g, algorithm="prim")
+    return StaticTopology("mst", make_graph(n, [canon(int(i), int(j)) for i, j in tree.edges]))
+
+
+def dmbst_topology(net: NetworkSpec, wl: Workload, delta: int = 3) -> StaticTopology:
+    """delta-MBST [58]: degree-bounded (min-bottleneck) spanning tree.
+
+    Greedy Kruskal over nominal delays with a degree cap; if the cap
+    makes a component unjoinable, the smallest-delay violating edge is
+    admitted (the same relaxation Marfoq et al. use in practice).
+    """
+    d = nominal_delay_matrix(net, wl)
+    n = net.num_silos
+    edges = sorted(
+        ((float(d[i, j]), i, j) for i in range(n) for j in range(i + 1, n)))
+    parent = list(range(n))
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    deg = np.zeros(n, dtype=np.int64)
+    chosen: list[Pair] = []
+    # Pass 1: respect the degree bound.
+    for w, i, j in edges:
+        if len(chosen) == n - 1:
+            break
+        if find(i) != find(j) and deg[i] < delta and deg[j] < delta:
+            parent[find(i)] = find(j)
+            deg[i] += 1
+            deg[j] += 1
+            chosen.append(canon(i, j))
+    # Pass 2: if still disconnected, relax the bound minimally.
+    for w, i, j in edges:
+        if len(chosen) == n - 1:
+            break
+        if find(i) != find(j):
+            parent[find(i)] = find(j)
+            deg[i] += 1
+            deg[j] += 1
+            chosen.append(canon(i, j))
+    return StaticTopology(f"dmbst", make_graph(n, chosen))
+
+
+def ring_topology(net: NetworkSpec, wl: Workload) -> StaticTopology:
+    """RING [58]: Christofides TSP cycle over nominal pair delays.
+
+    This is also the overlay from which the paper's multigraph is built
+    (paper §4.1: "Similar to [58], we use the Christofides algorithm to
+    obtain the overlay").
+    """
+    d = nominal_delay_matrix(net, wl)
+    n = net.num_silos
+    g = nx.Graph()
+    for i in range(n):
+        for j in range(i + 1, n):
+            g.add_edge(i, j, weight=float(d[i, j]))
+    if n <= 3:
+        cycle = list(range(n)) + [0]
+    else:
+        cycle = nx.approximation.traveling_salesman_problem(
+            g, cycle=True, method=nx.approximation.christofides)
+    pairs = {canon(int(cycle[i]), int(cycle[i + 1])) for i in range(len(cycle) - 1)}
+    return StaticTopology("ring", make_graph(n, pairs))
+
+
+@dataclasses.dataclass
+class MatchaTopology:
+    """MATCHA [85]: matching decomposition + random activation.
+
+    The base graph is decomposed into matchings (vertex coloring of the
+    line graph); each round every matching is activated independently
+    with probability `budget` (the communication budget C_b). MATCHA
+    runs over the connectivity graph; MATCHA(+) — Marfoq et al.'s
+    variant — runs over the (approximate) physical underlay, which is
+    why the two coincide on fully-meshed cloud networks (Table 1:
+    identical Gaia/Amazon rows) and differ on ISP topologies.
+    """
+
+    name: str
+    num_nodes: int
+    matchings: list[tuple[Pair, ...]]
+    budget: float
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def round_graph(self, k: int) -> SimpleGraph:
+        pairs: list[Pair] = []
+        for m in self.matchings:
+            if self._rng.random() < self.budget:
+                pairs.extend(m)
+        return make_graph(self.num_nodes, pairs)
+
+
+def _matching_decomposition(graph: SimpleGraph) -> list[tuple[Pair, ...]]:
+    """Edge-color the graph greedily; each color class is a matching."""
+    lg = nx.Graph()
+    lg.add_nodes_from(graph.pairs)
+    for a in graph.pairs:
+        for b in graph.pairs:
+            if a < b and len(set(a) & set(b)) > 0:
+                lg.add_edge(a, b)
+    coloring = nx.coloring.greedy_color(lg, strategy="largest_first")
+    classes: dict[int, list[Pair]] = {}
+    for pair, c in coloring.items():
+        classes.setdefault(c, []).append(pair)
+    return [tuple(sorted(v)) for _, v in sorted(classes.items())]
+
+
+def matcha_topology(net: NetworkSpec, wl: Workload, budget: float = 0.5,
+                    seed: int = 0) -> MatchaTopology:
+    base = connectivity_graph(net)
+    return MatchaTopology("matcha", net.num_silos,
+                          _matching_decomposition(base), budget, seed)
+
+
+def matcha_plus_topology(net: NetworkSpec, wl: Workload, budget: float = 0.5,
+                         seed: int = 0) -> MatchaTopology:
+    if net.name in ("gaia", "amazon"):
+        base = connectivity_graph(net)  # cloud networks are fully meshed
+    else:
+        base = physical_graph(net)
+    return MatchaTopology("matcha_plus", net.num_silos,
+                          _matching_decomposition(base), budget, seed)
+
+
+TOPOLOGIES = {
+    "star": star_topology,
+    "matcha": matcha_topology,
+    "matcha_plus": matcha_plus_topology,
+    "mst": mst_topology,
+    "dmbst": dmbst_topology,
+    "ring": ring_topology,
+}
+
+
+def build_topology(name: str, net: NetworkSpec, wl: Workload, **kw) -> TopologyDesign:
+    try:
+        return TOPOLOGIES[name](net, wl, **kw)
+    except KeyError:
+        raise KeyError(f"unknown topology {name!r}; have {sorted(TOPOLOGIES)} "
+                       f"(+ 'multigraph' via repro.core.simulator)") from None

@@ -1,0 +1,4 @@
+from repro.data.synthetic import (FederatedDataset, make_federated_dataset,
+                                  make_lm_dataset)
+
+__all__ = ["FederatedDataset", "make_federated_dataset", "make_lm_dataset"]

@@ -1,0 +1,5 @@
+from repro.fl.dpasgd import FLSimState, make_round_schedule, RoundPlan
+from repro.fl.trainer import FLConfig, run_fl
+
+__all__ = ["FLSimState", "RoundPlan", "make_round_schedule", "FLConfig",
+           "run_fl"]

@@ -1,0 +1,227 @@
+"""DPASGD with multigraph states (paper Eq. 2 / Eq. 6) — simulation mode.
+
+N silos live on one host as a stacked pytree (leading silo axis); every
+communication round is one jitted step:
+
+  1. u local SGD updates per silo (Eq. 2, lower branch) — vmap over the
+     silo axis;
+  2. buffer refresh: every STRONG pair of the current state exchanges
+     fresh weights (both directions);
+  3. aggregation (Eq. 6): w_i <- A[i,i] w_i + sum_j A[i,j] buf[j->i],
+     where A is the Metropolis-Hastings matrix of the OVERLAY and
+     buf[j->i] holds w_j(k-h) — fresh (h=0) if the edge was strong this
+     round, stale otherwise. A node whose edges are all weak aggregates
+     entirely from its stale buffers — it "does model aggregation
+     without waiting for other nodes" (paper §1), which is exactly the
+     isolated-node mechanism. Timing is accounted by core/simulator.py.
+
+Static baselines (STAR/MST/RING/MATCHA) use the same step with per-round
+(strong_mask, coeffs) of their own graphs, so every topology trains
+through one code path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import parsing
+from repro.core.consensus import metropolis_weights
+from repro.core.graph import MultigraphState, SimpleGraph
+from repro.core.multigraph import build_multigraph
+from repro.core.topology import build_topology, ring_topology
+from repro.core.delay import Workload
+from repro.networks.zoo import NetworkSpec
+
+Params = Any
+
+
+@dataclasses.dataclass
+class RoundPlan:
+    """Static per-round aggregation plan (host-side, feeds the jitted step).
+
+    Directed edges are indexed 0..2E-1 over the base graph; per round we
+    provide which are strong, the aggregation coefficient per directed
+    edge, and the self coefficient per silo.
+    """
+
+    src: np.ndarray          # (2E,) int32
+    dst: np.ndarray          # (2E,) int32
+    strong: np.ndarray       # (R, 2E) bool — refresh buffer this round?
+    coeffs: np.ndarray       # (R, 2E) f32  — A[dst, src] this round
+    diag: np.ndarray         # (R, N) f32   — A[i, i] this round
+    aggregate: np.ndarray    # (R,) bool    — aggregation round at all?
+
+    @property
+    def num_rounds_cycle(self) -> int:
+        return self.strong.shape[0]
+
+
+def _directed_edges(graph: SimpleGraph):
+    src, dst = [], []
+    for i, j in graph.pairs:
+        src += [i, j]
+        dst += [j, i]
+    return np.asarray(src, np.int32), np.asarray(dst, np.int32)
+
+
+def multigraph_plan(net: NetworkSpec, wl: Workload, t: int = 5,
+                    cap_states: int | None = 120) -> tuple[RoundPlan, list[MultigraphState], SimpleGraph]:
+    """Plan for the paper's multigraph: overlay MH weights, per-state
+
+    strong masks (weak edges keep their coefficient but read stale
+    buffers)."""
+    overlay = ring_topology(net, wl).graph
+    mg = build_multigraph(net, wl, overlay, t=t)
+    states = parsing.parse_multigraph(mg, cap_states=cap_states)
+    src, dst = _directed_edges(overlay)
+    a = metropolis_weights(overlay)
+    r = len(states)
+    e2 = len(src)
+    strong = np.zeros((r, e2), bool)
+    coeffs = np.zeros((r, e2), np.float32)
+    diag = np.zeros((r, net.num_silos), np.float32)
+    for k, st in enumerate(states):
+        et = st.edge_type
+        for e in range(e2):
+            i, j = int(src[e]), int(dst[e])
+            p = (i, j) if i < j else (j, i)
+            strong[k, e] = bool(et[p])
+            coeffs[k, e] = a[j, i]  # weight of src model in dst's average
+        diag[k] = np.diag(a)
+    plan = RoundPlan(src=src, dst=dst, strong=strong, coeffs=coeffs,
+                     diag=diag, aggregate=np.ones((r,), bool))
+    return plan, states, overlay
+
+
+def static_plan(graph: SimpleGraph) -> RoundPlan:
+    """Every round: all edges strong, MH coefficients of the graph."""
+    src, dst = _directed_edges(graph)
+    a = metropolis_weights(graph)
+    coeffs = np.asarray([a[int(d), int(s)] for s, d in zip(src, dst)],
+                        np.float32)
+    return RoundPlan(
+        src=src, dst=dst,
+        strong=np.ones((1, len(src)), bool),
+        coeffs=coeffs[None],
+        diag=np.diag(a)[None].astype(np.float32),
+        aggregate=np.ones((1,), bool))
+
+
+def matcha_plan(design, num_nodes: int, rounds: int) -> RoundPlan:
+    """Per-round sampled matchings: coefficients are MH of the ACTIVE
+
+    graph that round; inactive edges get coefficient 0."""
+    base_pairs = sorted({p for m in design.matchings for p in m})
+    base = SimpleGraph(num_nodes=num_nodes, pairs=tuple(base_pairs))
+    src, dst = _directed_edges(base)
+    e2 = len(src)
+    strong = np.zeros((rounds, e2), bool)
+    coeffs = np.zeros((rounds, e2), np.float32)
+    diag = np.ones((rounds, num_nodes), np.float32)
+    pair_index = {p: ei for ei, p in enumerate(base.pairs)}
+    for k in range(rounds):
+        g = design.round_graph(k)
+        if not g.pairs:
+            continue
+        a = metropolis_weights(g)
+        for p in g.pairs:
+            ei = pair_index[p]
+            i, j = p
+            strong[k, 2 * ei] = strong[k, 2 * ei + 1] = True
+            coeffs[k, 2 * ei] = a[j, i]
+            coeffs[k, 2 * ei + 1] = a[i, j]
+        diag[k] = np.diag(a)
+    return RoundPlan(src=src, dst=dst, strong=strong, coeffs=coeffs,
+                     diag=diag, aggregate=np.ones((rounds,), bool))
+
+
+def make_round_schedule(topology: str, net: NetworkSpec, wl: Workload, *,
+                        t: int = 5, rounds: int = 1, seed: int = 0):
+    """RoundPlan for any topology in the paper's Table 1."""
+    if topology == "multigraph":
+        plan, _, _ = multigraph_plan(net, wl, t=t)
+        return plan
+    design = build_topology(topology, net, wl, **(
+        {"seed": seed} if topology.startswith("matcha") else {}))
+    if topology.startswith("matcha"):
+        return matcha_plan(design, net.num_silos, rounds)
+    return static_plan(design.round_graph(0))
+
+
+# ---------------------------------------------------------------------------
+# jitted FL round step
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FLSimState:
+    silo_params: Params   # leaves (N, ...)
+    opt_state: Params     # leaves (N, ...)
+    buffers: Params       # leaves (2E, ...) — buf[e] = last w_src(e) seen
+
+    def tree_flatten(self):
+        return (self.silo_params, self.opt_state, self.buffers), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_fl_state(init_params: Callable[[jax.Array], Params], opt,
+                  num_silos: int, src: np.ndarray,
+                  key: jax.Array) -> FLSimState:
+    keys = jax.random.split(key, num_silos)
+    # Identical init across silos (the standard FL assumption).
+    p0 = init_params(keys[0])
+    silo_params = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (num_silos,) + x.shape).copy(), p0)
+    opt_state = jax.vmap(opt.init)(silo_params)
+    buffers = jax.tree.map(lambda w: w[src], silo_params)
+    return FLSimState(silo_params, opt_state, buffers)
+
+
+def fl_round_step(state: FLSimState, batches, plan_src, plan_dst,
+                  strong, coeffs, diag, *, loss_fn, opt, local_updates: int,
+                  lr_scale=1.0) -> tuple[FLSimState, jax.Array]:
+    """One communication round (jit-friendly; plan_* are arrays).
+
+    batches: pytree with leaves (u, N, b, ...) — one micro batch per
+    local update per silo.
+    """
+    w, os_ = state.silo_params, state.opt_state
+
+    def local_step(carry, batch_u):
+        w, os_ = carry
+        loss, grads = jax.vmap(jax.value_and_grad(loss_fn))(w, batch_u)
+        w, os_ = jax.vmap(
+            lambda p, g, s: opt.update(p, g, s, lr_scale))(w, grads, os_)
+        return (w, os_), loss
+
+    (w, os_), losses = jax.lax.scan(local_step, (w, os_), batches)
+
+    # buffer refresh on strong edges (fresh w_src), else keep stale
+    def refresh(buf, wall):
+        fresh = wall[plan_src]
+        mask = strong.reshape((-1,) + (1,) * (buf.ndim - 1))
+        return jnp.where(mask, fresh, buf)
+
+    buffers = jax.tree.map(refresh, state.buffers, w)
+
+    # aggregation: w_i <- diag_i * w_i + sum_{e: dst=i} coeff_e * buf_e
+    n = jax.tree.leaves(w)[0].shape[0]
+
+    def aggregate(wall, buf):
+        c = coeffs.reshape((-1,) + (1,) * (buf.ndim - 1)).astype(buf.dtype)
+        contrib = jax.ops.segment_sum(c * buf, plan_dst, num_segments=n)
+        d = diag.reshape((n,) + (1,) * (wall.ndim - 1)).astype(wall.dtype)
+        return d * wall + contrib
+
+    w = jax.tree.map(aggregate, w, buffers)
+    return FLSimState(w, os_, buffers), jnp.mean(losses)

@@ -1,0 +1,171 @@
+"""FL training loop: runs any topology end-to-end on the paper's models
+
++ synthetic federated data, and pairs the learning curve with the
+cycle-time simulator so results can be plotted against wall-clock time
+(paper Fig. 5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import parsing
+from repro.core.delay import WORKLOADS, MultigraphDelayTracker, Workload, static_cycle_time_ms
+from repro.core.simulator import simulate
+from repro.core.topology import build_topology, ring_topology
+from repro.data.synthetic import FederatedDataset, make_federated_dataset
+from repro.fl import dpasgd
+from repro.models.small import SMALL_MODELS, SmallModelSpec
+from repro.networks.zoo import NetworkSpec, get_network
+from repro.optim import sgd
+
+_DATASET_MODEL = {"femnist": "femnist_cnn", "sent140": "sent140_lstm",
+                  "inat": "inat_resnet"}
+_DATASET_WL = {"femnist": "femnist", "sent140": "sentiment140",
+               "inat": "inaturalist"}
+
+
+@dataclasses.dataclass
+class FLConfig:
+    dataset: str = "femnist"
+    network: str = "gaia"
+    topology: str = "multigraph"
+    t: int = 5
+    rounds: int = 200
+    local_updates: int = 1
+    batch_size: int = 32
+    lr: float = 0.05
+    momentum: float = 0.0
+    seed: int = 0
+    eval_every: int = 20
+    samples_per_silo: int = 128
+    alpha: float = 0.5          # Dirichlet non-IID level
+    # Table 4 ablation: remove silos from the RING overlay.
+    remove_silos: int = 0
+    remove_strategy: str = "none"  # none | random | inefficient
+
+
+@dataclasses.dataclass
+class FLResult:
+    config: FLConfig
+    round_losses: list[float]
+    eval_rounds: list[int]
+    eval_accs: list[float]
+    cycle_times_ms: list[float]
+    mean_cycle_ms: float
+    total_time_s: float
+
+    def final_acc(self) -> float:
+        return self.eval_accs[-1] if self.eval_accs else float("nan")
+
+    def wallclock_axis_s(self) -> np.ndarray:
+        return np.cumsum(self.cycle_times_ms) / 1e3
+
+
+def _removed_network(net: NetworkSpec, wl: Workload, k: int,
+                     strategy: str, seed: int) -> tuple[NetworkSpec, np.ndarray]:
+    """Drop k silos from the network (Table 4 ablation). Returns the
+
+    reduced NetworkSpec and the kept silo indices."""
+    n = net.num_silos
+    if strategy == "random":
+        rng = np.random.default_rng(seed)
+        drop = set(rng.choice(n, size=k, replace=False).tolist())
+    elif strategy == "inefficient":
+        # Remove silos with the longest total delay to ring neighbours.
+        overlay = ring_topology(net, wl).graph
+        from repro.core.delay import graph_pair_delays
+        delays = graph_pair_delays(net, wl, overlay)
+        score = np.zeros(n)
+        for (i, j), d in delays.items():
+            score[i] += d
+            score[j] += d
+        drop = set(np.argsort(-score)[:k].tolist())
+    else:
+        raise ValueError(strategy)
+    keep = np.asarray([i for i in range(n) if i not in drop], np.int64)
+    silos = tuple(net.silos[i] for i in keep)
+    lat = net.latency_ms[np.ix_(keep, keep)]
+    return NetworkSpec(name=f"{net.name}-minus{k}", silos=silos,
+                       latency_ms=lat), keep
+
+
+def _cycle_times(cfg: FLConfig, net: NetworkSpec, wl: Workload,
+                 rounds: int) -> list[float]:
+    if cfg.topology == "multigraph":
+        from repro.core.multigraph import build_multigraph
+        overlay = ring_topology(net, wl).graph
+        mg = build_multigraph(net, wl, overlay, t=cfg.t)
+        states = parsing.parse_multigraph(mg, cap_states=120)
+        tracker = MultigraphDelayTracker(net=net, wl=wl, overlay=overlay)
+        return [tracker.round_cycle_time(s)
+                for _, s in parsing.state_schedule(states, rounds)]
+    rep = simulate(cfg.topology, net, wl, num_rounds=rounds)
+    return [rep.mean_cycle_ms] * rounds
+
+
+def run_fl(cfg: FLConfig) -> FLResult:
+    wl = WORKLOADS[_DATASET_WL[cfg.dataset]]
+    net = get_network(cfg.network)
+    if cfg.remove_strategy != "none" and cfg.remove_silos > 0:
+        net, _ = _removed_network(net, wl, cfg.remove_silos,
+                                  cfg.remove_strategy, cfg.seed)
+
+    n = net.num_silos
+    spec: SmallModelSpec = SMALL_MODELS[_DATASET_MODEL[cfg.dataset]]
+    data = make_federated_dataset(cfg.dataset, n,
+                                  samples_per_silo=cfg.samples_per_silo,
+                                  alpha=cfg.alpha, seed=cfg.seed)
+
+    plan = dpasgd.make_round_schedule(cfg.topology, net, wl, t=cfg.t,
+                                      rounds=cfg.rounds, seed=cfg.seed)
+    opt = sgd(cfg.lr, momentum=cfg.momentum)
+    key = jax.random.PRNGKey(cfg.seed)
+    state = dpasgd.init_fl_state(spec.init, opt, n, plan.src, key)
+
+    loss_fn = lambda p, b: spec.loss(p, b)
+    step = jax.jit(lambda st, batches, s, c, d: dpasgd.fl_round_step(
+        st, batches, plan.src, plan.dst, s, c, d,
+        loss_fn=loss_fn, opt=opt, local_updates=cfg.local_updates))
+
+    eval_params_fn = jax.jit(
+        lambda w: jax.tree.map(lambda x: jnp.mean(x, axis=0), w))
+    test_batch = {"x": jnp.asarray(data.test_x),
+                  "y": jnp.asarray(data.test_y)}
+    acc_fn = jax.jit(lambda p: spec.accuracy(p, test_batch))
+
+    rng = np.random.default_rng(cfg.seed + 1)
+    r_cycle = plan.num_rounds_cycle
+
+    round_losses, eval_rounds, eval_accs = [], [], []
+    for k in range(cfg.rounds):
+        xs, ys = [], []
+        for _ in range(cfg.local_updates):
+            per_silo = [data.sample_batch(s, cfg.batch_size, rng)
+                        for s in range(n)]
+            xs.append(np.stack([b["x"] for b in per_silo]))
+            ys.append(np.stack([b["y"] for b in per_silo]))
+        batches = {"x": jnp.asarray(np.stack(xs)),
+                   "y": jnp.asarray(np.stack(ys))}
+        pk = k % r_cycle
+        state, loss = step(state, batches,
+                           jnp.asarray(plan.strong[pk]),
+                           jnp.asarray(plan.coeffs[pk]),
+                           jnp.asarray(plan.diag[pk]))
+        round_losses.append(float(loss))
+        if (k + 1) % cfg.eval_every == 0 or k == cfg.rounds - 1:
+            acc = float(acc_fn(eval_params_fn(state.silo_params)))
+            eval_rounds.append(k + 1)
+            eval_accs.append(acc)
+
+    cycle = _cycle_times(cfg, net, wl, cfg.rounds)
+    return FLResult(config=cfg, round_losses=round_losses,
+                    eval_rounds=eval_rounds, eval_accs=eval_accs,
+                    cycle_times_ms=cycle,
+                    mean_cycle_ms=float(np.mean(cycle)),
+                    total_time_s=float(np.sum(cycle)) / 1e3)

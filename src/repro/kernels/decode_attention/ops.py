@@ -1,0 +1,15 @@
+"""Jitted wrapper for the flash-decode kernel (interpret off-TPU)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.decode_attention.kernel import decode_attention as _kernel
+
+
+def decode_attention(q, k, v, lengths, *, block_s: int = 512,
+                     interpret: bool | None = None) -> jax.Array:
+    """q (B, Hq, hd), k/v (B, Hkv, S, hd), lengths (B,) -> (B, Hq, hd)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _kernel(q, k, v, lengths, block_s=block_s, interpret=interpret)

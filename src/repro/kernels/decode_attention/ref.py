@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the flash-decode kernel.
+
+One query token per sequence against a KV cache:
+  q (B, Hq, hd), k/v cache (B, Hkv, S, hd), lengths (B,) valid prefix.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, lengths) -> jax.Array:
+    b, hq, hd = q.shape
+    _, hkv, s, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, hd)
+    scores = jnp.einsum("bhgd,bhkd->bhgk", qg, k) / np.sqrt(hd)
+    scores = scores.astype(jnp.float32)
+    ok = jnp.arange(s)[None, :] < lengths[:, None]  # (B, S)
+    scores = jnp.where(ok[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgk,bhkd->bhgd", probs, v)
+    return out.reshape(b, hq, hd)

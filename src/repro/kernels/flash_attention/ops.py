@@ -1,0 +1,43 @@
+"""Jitted public wrapper for the flash attention kernel.
+
+Accepts the model layout q/k/v (B, S, H, hd) (attention.py convention),
+transposes to the kernel layout (B, H, S, hd), and auto-selects
+interpret mode on non-TPU backends so the same call site works on CPU
+tests and TPU deployments.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention as _kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0, prefix: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """q (B, S, Hq, hd), k/v (B, S, Hkv, hd) -> (B, S, Hq, hd)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = _kernel(qt, kt, vt, causal=causal, window=window, prefix=prefix,
+                  block_q=block_q, block_k=block_k, interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)
+
+
+def flash_attention_reference(q, k, v, *, causal: bool = True,
+                              window: int = 0, prefix: int = 0) -> jax.Array:
+    """Oracle with the same model-layout signature."""
+    out = flash_attention_ref(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                              jnp.swapaxes(v, 1, 2), causal=causal,
+                              window=window, prefix=prefix)
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the flash attention kernel.
+
+Layout matches the kernel: q (B, Hq, Sq, hd), k/v (B, Hkv, Sk, hd).
+Supports GQA (Hq multiple of Hkv), causal masking, sliding window, and
+a bidirectional prefix (paligemma image tokens).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+NEG_INF = -1e30
+
+
+def attention_mask(sq: int, sk: int, *, causal: bool = True, window: int = 0,
+                   prefix: int = 0) -> jnp.ndarray:
+    """(sq, sk) boolean mask; query i is at absolute position i+(sk-sq)."""
+    off = sk - sq
+    i = jnp.arange(sq)[:, None] + off
+    j = jnp.arange(sk)[None, :]
+    ok = (j <= i) if causal else jnp.ones((sq, sk), bool)
+    if window > 0:
+        ok &= (i - j) < window
+    if prefix > 0:
+        ok |= (i < prefix) & (j < prefix)
+    return ok
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        prefix: int = 0) -> jax.Array:
+    b, hq, sq, hd = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, sq, hd)
+    scores = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k) / np.sqrt(hd)
+    scores = scores.astype(jnp.float32)
+    ok = attention_mask(sq, sk, causal=causal, window=window, prefix=prefix)
+    scores = jnp.where(ok[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, v)
+    return out.reshape(b, hq, sq, hd)

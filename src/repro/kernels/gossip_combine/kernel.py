@@ -1,0 +1,52 @@
+"""Fused gossip-combine Pallas TPU kernel.
+
+The DPASGD aggregation step (paper Eq. 2/6) computes
+    w_i <- sum_{j in N_i^{++} u {i}} A[i,j] * w_j
+over the neighbor weight buffers of the current multigraph state. Done
+naively (one jnp op per neighbor) this reads the model K times from HBM
+and writes K-1 intermediates; at silo scale the model is GBs, so the
+aggregation is purely HBM-bandwidth-bound. This kernel fuses the whole
+weighted sum into ONE pass: each grid step loads a (K, block_t) tile
+into VMEM, reduces over K in fp32, and writes a (block_t,) tile — HBM
+traffic of (K+1)/(2K) vs the naive schedule, and zero intermediates.
+
+Weights arrive flattened (K, T); T is tiled in MXU-lane-aligned blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _combine_kernel(w_ref, a_ref, o_ref):
+    w = w_ref[...].astype(jnp.float32)          # (K, block_t)
+    a = a_ref[...].astype(jnp.float32)          # (K, 1)
+    o_ref[...] = jnp.sum(w * a, axis=0, keepdims=True).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def gossip_combine(weights: jax.Array, coeffs: jax.Array, *,
+                   block_t: int = 65536, interpret: bool = False) -> jax.Array:
+    """weights (K, T), coeffs (K,) -> (T,)."""
+    k, t = weights.shape
+    block_t = min(block_t, t)
+    pad = (-t) % block_t
+    if pad:
+        weights = jnp.pad(weights, ((0, 0), (0, pad)))
+    tp = t + pad
+    out = pl.pallas_call(
+        _combine_kernel,
+        grid=(tp // block_t,),
+        in_specs=[
+            pl.BlockSpec((k, block_t), lambda i: (0, i)),
+            pl.BlockSpec((k, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_t), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, tp), weights.dtype),
+        interpret=interpret,
+    )(weights, coeffs[:, None])
+    return out[0, :t]

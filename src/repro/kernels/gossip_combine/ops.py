@@ -1,0 +1,34 @@
+"""Public wrapper: pytree-level fused gossip combine.
+
+`combine_pytree` applies the kernel leaf-wise over a stacked params
+pytree (leading neighbor axis K), which is exactly the shape produced by
+the FL gossip backends (repro/fl/gossip.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.gossip_combine.kernel import gossip_combine as _kernel
+
+
+def gossip_combine(weights: jax.Array, coeffs: jax.Array, *,
+                   interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _kernel(weights, coeffs, interpret=interpret)
+
+
+def combine_pytree(stacked_params, coeffs: jax.Array, *,
+                   interpret: bool | None = None):
+    """stacked_params: pytree with leading axis K on every leaf."""
+
+    def leaf(w):
+        k = w.shape[0]
+        flat = w.reshape(k, -1)
+        return gossip_combine(flat, coeffs, interpret=interpret).reshape(
+            w.shape[1:])
+
+    return jax.tree.map(leaf, stacked_params)

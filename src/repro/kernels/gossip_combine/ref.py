@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for gossip_combine: out = sum_k a[k] * w[k]."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gossip_combine_ref(weights: jax.Array, coeffs: jax.Array) -> jax.Array:
+    """weights (K, T), coeffs (K,) -> (T,). fp32 accumulation."""
+    acc = jnp.einsum("k,kt->t", coeffs.astype(jnp.float32),
+                     weights.astype(jnp.float32))
+    return acc.astype(weights.dtype)

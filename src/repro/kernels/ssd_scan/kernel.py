@@ -1,0 +1,108 @@
+"""Mamba2 SSD chunked-scan Pallas TPU kernel.
+
+TPU adaptation: the Mamba2 CUDA kernel leans on warp-level scans; on TPU
+we use the SSD *dual form* — per chunk a (Q,Q) attention-like matmul
+(MXU work) plus a rank-N recurrent state carried in VMEM scratch across
+the chunk grid dimension (sequential on TPU). This keeps all per-chunk
+operands in VMEM: for Q=256, P=64, N=128 the working set is
+Q*(P+2N) + Q*Q + P*N floats ~= 0.6 MB, far under the ~16 MB VMEM budget,
+and every matmul has MXU-aligned contracting dims.
+
+Grid: (batch*heads, num_chunks), chunks innermost. B/C are shared across
+heads (Mamba2 single-group), so their index_map folds the head away.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, state_ref, *,
+                chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)    # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)  # (Q,)
+    A = a_ref[0, 0].astype(jnp.float32)    # scalar
+    B = b_ref[0, 0].astype(jnp.float32)    # (Q, N)
+    C = c_ref[0, 0].astype(jnp.float32)    # (Q, N)
+
+    a = dt * A                      # (Q,) negative
+    acs = jnp.cumsum(a)             # (Q,)
+    dtx = x * dt[:, None]           # (Q, P)
+
+    # within-chunk dual form
+    gap = acs[:, None] - acs[None, :]           # (Q, Q)
+    iq = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    ik = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    gap = jnp.where(iq >= ik, gap, -jnp.inf)    # mask BEFORE exp
+    decay = jnp.exp(gap)
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    y_diag = jax.lax.dot_general(scores * decay, dtx,
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+    # contribution of the carried inter-chunk state
+    state = state_ref[...]                       # (P, N)
+    y_inter = jax.lax.dot_general(C, state, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y_inter = y_inter * jnp.exp(acs)[:, None]    # (Q, P)
+
+    o_ref[0, 0] = (y_diag + y_inter).astype(o_ref.dtype)
+
+    # state update: decay whole chunk + inject dt-weighted inputs
+    to_end = jnp.exp(acs[-1] - acs)              # (Q,)
+    inj = jax.lax.dot_general(dtx * to_end[:, None], B,
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # (P, N)
+    state_ref[...] = state * jnp.exp(acs[-1]) + inj
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 256,
+             interpret: bool = False) -> jax.Array:
+    """x (b,s,h,p), dt (b,s,h), A (h,), B/C (b,s,n) -> y (b,s,h,p)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0, f"seq {s} % chunk {chunk} != 0 (pad upstream)"
+    nc = s // chunk
+
+    xr = jnp.moveaxis(x, 2, 1).reshape(b * h, nc, chunk, p)
+    dtr = jnp.moveaxis(dt, 2, 1).reshape(b * h, nc, chunk)
+    ar = jnp.broadcast_to(A[None, :], (b, h)).reshape(b * h, 1)
+    br = B.reshape(b, nc, chunk, n)
+    cr = C.reshape(b, nc, chunk, n)
+
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=(b * h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda bh, c: (bh, c, 0, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, 1), lambda bh, c: (bh, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda bh, c, _h=h: (bh // _h, c, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda bh, c, _h=h: (bh // _h, c, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, p), lambda bh, c: (bh, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, nc, chunk, p), x.dtype),
+        scratch_shapes=_scratch(p, n),
+        interpret=interpret,
+    )(xr, dtr, ar, br, cr)
+    return jnp.moveaxis(out.reshape(b, h, s, p), 1, 2)
+
+
+def _scratch(p: int, n: int):
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+        return [pltpu.VMEM((p, n), jnp.float32)]
+    except Exception:  # pragma: no cover
+        return [pl.MemorySpace.ANY((p, n), jnp.float32)]

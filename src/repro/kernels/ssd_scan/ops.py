@@ -1,0 +1,30 @@
+"""Jitted public wrapper for the SSD scan kernel.
+
+Handles seq padding to a chunk multiple (dt=0 on padded steps keeps the
+recurrent state exact: decay=exp(0)=1, injection dt*x=0) and interpret
+auto-selection off-TPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan as _kernel
+
+
+def ssd_scan(x, dt, A, B, C, *, chunk: int = 256,
+             interpret: bool | None = None) -> jax.Array:
+    """x (b,s,h,p), dt (b,s,h), A (h,), B/C (b,s,n) -> y (b,s,h,p)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, s, h, p = x.shape
+    chunk = min(chunk, s) if s % chunk else chunk
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    y = _kernel(x, dt, A, B, C, chunk=chunk, interpret=interpret)
+    return y[:, :s]

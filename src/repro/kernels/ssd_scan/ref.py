@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the SSD (Mamba2) chunked-scan kernel.
+
+Delegates to the model-side reference implementation so the kernel, the
+model, and the tests all agree on one semantics.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.models.mamba2 import ssd_reference
+
+
+def ssd_scan_ref(x, dt, A, B, C, *, chunk: int) -> jax.Array:
+    """x (b,s,h,p), dt (b,s,h), A (h,), B/C (b,s,n) -> y (b,s,h,p)."""
+    return ssd_reference(x, dt, A, B, C, chunk=chunk)

@@ -1,0 +1,257 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) pair.
+
+The two lines above MUST precede every other import (jax pins the device
+count at first init). 512 placeholder host devices back both meshes:
+single-pod uses the first 256 as (16,16)=("data","model"); multi-pod all
+512 as (2,16,16)=("pod","data","model") with the pod axis as the FL silo
+axis (the paper's cross-silo deployment).
+
+Per pair we record: memory_analysis (fits / per-device bytes),
+cost_analysis (FLOPs / bytes — scan bodies counted once, see
+hlo_analysis + roofline for the corrected numbers), and the collective
+schedule (bytes per collective kind, trip-count weighted).
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ALIASES, ARCH_IDS, get_config  # noqa: E402
+from repro.launch import hlo_analysis, sharding as shrules  # noqa: E402
+from repro.launch.mesh import make_debug_mesh, make_production_mesh  # noqa: E402
+from repro.launch.specs import (SHAPES, batch_shape, decode_shapes,  # noqa: E402
+                                params_shape, shape_applicable)
+from repro.launch.steps import (make_fl_train_step, make_prefill_step,  # noqa: E402
+                                make_serve_step, make_train_step)
+from repro.optim import adamw  # noqa: E402
+
+FL_SILOS = 2  # multi-pod: one silo per pod
+
+
+def _opt_specs(pspec_tree):
+    return {"step": P(),
+            "m": jax.tree.map(lambda s: s, pspec_tree,
+                              is_leaf=lambda x: isinstance(x, P)),
+            "v": jax.tree.map(lambda s: s, pspec_tree,
+                              is_leaf=lambda x: isinstance(x, P))}
+
+
+def _stack_shapes(tree, n):
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((n,) + l.shape, l.dtype), tree)
+
+
+def lower_pair(arch: str, shape_name: str, mesh, *, multi_pod: bool,
+               gossip: bool = True, impl: str = "chunked",
+               fsdp_layers: bool = True, remat: bool = True,
+               microbatch: int = 8, gossip_dtype: str = "float32",
+               kv_seq_shard: bool = False, grad_dtype: str | None = None):
+    """Lower + compile one (arch, shape, mesh). microbatch=8 is part of
+    the BASELINE for train shapes — without gradient accumulation the
+    4k-seq batch-256 activations of the larger configs exceed a v5e's
+    16 GB HBM (EXPERIMENTS.md §Dry-run)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    report = {"arch": arch, "shape": shape_name,
+              "mesh": "multi" if multi_pod else "single",
+              "mode": shape.mode, "family": cfg.family,
+              "params": cfg.param_count(),
+              "active_params": cfg.active_param_count()}
+    if not ok:
+        report.update(status="skipped", reason=why)
+        return report
+
+    t0 = time.time()
+    pshape = params_shape(cfg)
+    opt = adamw(1e-4)
+
+    # Anchor activations (Megatron TP interior + data-parallel batch).
+    # Without anchors GSPMD propagates FSDP weight shardings into the
+    # scan carry (involuntary full remat) or replicates wide interiors.
+    from repro.models import shard_ctx
+    if shape.mode in ("train", "prefill"):
+        shard_ctx.set_specs(act=P("data", None, None),
+                            channels=P("data", None, "model"),
+                            heads=P("data", None, "model", None))
+    else:
+        shard_ctx.clear()
+
+    if shape.mode == "train":
+        fl = multi_pod  # multi-pod training runs the FL round step
+        if fl:
+            pshape_in = _stack_shapes(pshape, FL_SILOS)
+            step = make_fl_train_step(cfg, FL_SILOS, opt, impl=impl,
+                                      remat=remat, gossip=gossip,
+                                      microbatch=microbatch,
+                                      gossip_dtype=gossip_dtype,
+                                      grad_dtype=grad_dtype)
+            bshape = batch_shape(cfg, shape, fl_silos=FL_SILOS)
+        else:
+            pshape_in = pshape
+            step = make_train_step(cfg, opt, impl=impl, remat=remat,
+                                   microbatch=microbatch)
+            bshape = batch_shape(cfg, shape)
+        pspec = shrules.param_specs(cfg, pshape_in, fsdp_layers=fsdp_layers,
+                                    pod_stacked=fl, mesh=mesh)
+        oshape = jax.eval_shape(
+            (jax.vmap(opt.init) if fl else opt.init), pshape_in)
+        ospec = _opt_specs(pspec)
+        if fl:
+            ospec["step"] = P(None)  # vmapped step counter (N,)
+        bspec = shrules.batch_specs(shape.mode, multi_pod=multi_pod, fl=fl,
+                                    has_prefix="prefix_embeds" in bshape)
+        bspec = {k: bspec[k] for k in bshape}
+        in_sh = (shrules.named(mesh, pspec), shrules.named(mesh, ospec),
+                 shrules.named(mesh, bspec))
+        args = (pshape_in, oshape, bshape)
+        fn = step
+
+    elif shape.mode == "prefill":
+        pspec = shrules.param_specs(cfg, pshape, fsdp_layers=fsdp_layers,
+                                    mesh=mesh)
+        bshape = batch_shape(cfg, shape)
+        bspec = shrules.batch_specs("prefill", multi_pod=multi_pod, fl=False,
+                                    has_prefix="prefix_embeds" in bshape)
+        bspec = {k: bspec[k] for k in bshape}
+        bshape.pop("labels", None)
+        bspec.pop("labels", None)
+        in_sh = (shrules.named(mesh, pspec), shrules.named(mesh, bspec))
+        args = (pshape, bshape)
+        fn = make_prefill_step(cfg, impl=impl)
+
+    else:  # decode
+        pspec = shrules.param_specs(cfg, pshape, fsdp_layers=fsdp_layers,
+                                    mesh=mesh)
+        tokens, state = decode_shapes(cfg, shape)
+        sspec = shrules.decode_cache_specs(cfg, state,
+                                           batch=shape.global_batch,
+                                           multi_pod=multi_pod, mesh=mesh,
+                                           kv_seq_shard=kv_seq_shard)
+        daxis = ("pod", "data") if multi_pod else "data"
+        tspec = P(daxis, None) if shape.global_batch > 1 else P(None, None)
+        in_sh = (shrules.named(mesh, pspec),
+                 NamedSharding(mesh, tspec),
+                 shrules.named(mesh, sspec))
+        args = (pshape, tokens, state)
+        fn = make_serve_step(cfg)
+
+    try:
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        text = compiled.as_text()
+        coll = hlo_analysis.collective_stats(text)
+        report.update(
+            status="ok",
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            memory=dict(
+                argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+                output_bytes=getattr(mem, "output_size_in_bytes", None),
+                temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+                generated_code_bytes=getattr(
+                    mem, "generated_code_size_in_bytes", None),
+            ),
+            cost=dict(
+                flops=float(ca.get("flops", 0.0)),
+                bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+            ),
+            collectives=coll.summary(),
+            while_trips=hlo_analysis.while_trip_counts(text),
+        )
+    except Exception as e:  # noqa: BLE001
+        report.update(status="error", error=f"{type(e).__name__}: {e}",
+                      trace=traceback.format_exc()[-3000:])
+    return report
+
+
+def run_all(mesh_kind: str, out_dir: pathlib.Path, archs=None, shapes=None,
+            debug: bool = False):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    archs = archs or ARCH_IDS
+    shapes = shapes or list(SHAPES)
+    meshes = []
+    if mesh_kind in ("single", "both"):
+        meshes.append((False, make_debug_mesh((2, 2), ("data", "model"))
+                       if debug else make_production_mesh(multi_pod=False)))
+    if mesh_kind in ("multi", "both"):
+        meshes.append((True, make_debug_mesh((2, 2, 2))
+                       if debug else make_production_mesh(multi_pod=True)))
+    results = []
+    for multi_pod, mesh in meshes:
+        mname = "multi" if multi_pod else "single"
+        for arch in archs:
+            for shape in shapes:
+                path = out_dir / f"{mname}__{arch}__{shape}.json"
+                if path.exists():
+                    print(f"[skip] {path.name} exists")
+                    results.append(json.loads(path.read_text()))
+                    continue
+                print(f"[dryrun] {mname} {arch} {shape} ...", flush=True)
+                rep = lower_pair(arch, shape, mesh, multi_pod=multi_pod)
+                path.write_text(json.dumps(rep, indent=1))
+                status = rep["status"]
+                extra = (f" compile={rep.get('compile_s')}s "
+                         f"flops={rep.get('cost', {}).get('flops', 0):.3g} "
+                         f"coll={rep.get('collectives', {}).get('total_bytes', 0):.3g}B"
+                         if status == "ok" else rep.get("reason",
+                                                        rep.get("error", "")))
+                print(f"[dryrun] {mname} {arch} {shape}: {status}{extra}",
+                      flush=True)
+                results.append(rep)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", help="architecture id/alias")
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--debug", action="store_true",
+                    help="tiny 4/8-device mesh (CI)")
+    ap.add_argument("--no-gossip", action="store_true",
+                    help="lower a weak (isolated) FL round instead")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    out = pathlib.Path(args.out)
+    if args.all:
+        run_all(args.mesh, out, debug=args.debug)
+        return
+    assert args.arch and args.shape, "--arch/--shape or --all"
+    multi = args.mesh == "multi"
+    mesh = (make_debug_mesh((2, 2, 2) if multi else (2, 2),
+                            ("pod", "data", "model") if multi
+                            else ("data", "model")) if args.debug
+            else make_production_mesh(multi_pod=multi))
+    rep = lower_pair(args.arch, args.shape, mesh, multi_pod=multi,
+                     gossip=not args.no_gossip)
+    print(json.dumps({k: v for k, v in rep.items() if k != "trace"},
+                     indent=1))
+    if rep["status"] == "error":
+        print(rep.get("trace", ""))
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

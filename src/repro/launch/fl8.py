@@ -1,0 +1,138 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Beyond-paper extension: 8-silo production mesh (8,8,8) = 512 chips.
+
+The 2-pod mesh of the main dry-run exercises the pair-exchange
+degenerate case; here we map EIGHT silos onto the pod axis — the actual
+regime the paper studies (rings, isolated nodes, per-state schedules) —
+and lower one DPASGD round per multigraph STATE TYPE with the edge-wise
+`lax.ppermute` gossip backend (repro/fl/gossip.py):
+
+  state "overlay"  — both ring directions strong (full gossip)
+  state "half"     — one direction weak (half the pod-axis bytes)
+  state "isolated" — all edges weak for this silo class (zero pod-axis
+                     collectives; stale buffers only)
+
+This demonstrates the paper's schedule as compiled collective structure
+at production scale, with the multigraph states mapping 1:1 onto
+ppermute sets. Results land in experiments/perf/D_*.json.
+"""
+
+import functools  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax import shard_map  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.fl.gossip import gossip_ring_ppermute, ring_coefficients  # noqa: E402
+from repro.launch import hlo_analysis, sharding as shrules  # noqa: E402
+from repro.launch.specs import SHAPES, batch_shape, params_shape  # noqa: E402
+from repro.launch.steps import make_loss_fn  # noqa: E402
+from repro.models import shard_ctx  # noqa: E402
+from repro.optim import adamw  # noqa: E402
+
+N_SILOS = 8
+OUT = pathlib.Path("experiments/perf")
+
+
+def make_mesh8():
+    dev = np.asarray(jax.devices()[:512]).reshape(8, 8, 8)
+    return jax.sharding.Mesh(dev, ("pod", "data", "model"))
+
+
+def build_step(cfg, active_left: bool, active_right: bool):
+    """One GOSSIP round over the pod axis (the aggregation half of a
+
+    DPASGD round; the local-update half is exercised by the 2-pod FL
+    dry-run — XLA's partial-manual partitioner currently CHECK-fails on
+    embedding gathers under a manual pod axis, see EXPERIMENTS.md).
+    Runs under shard_map manual on "pod"; model/data dims of the params
+    stay GSPMD-auto (TP inside each silo)."""
+    cs, cl, cr = ring_coefficients(N_SILOS)
+
+    def per_silo(params, bufs):
+        # leaves arrive with a leading length-1 pod slice; shed it
+        p = jax.tree.map(lambda x: x[0], params)
+        bl = jax.tree.map(lambda x: x[0], bufs["left"])
+        br = jax.tree.map(lambda x: x[0], bufs["right"])
+        p, nb = gossip_ring_ppermute(
+            p, {"left": bl, "right": br},
+            coeff_self=cs, coeff_left=cl, coeff_right=cr, axis="pod",
+            active_left=active_left, active_right=active_right)
+        add = lambda t: jax.tree.map(lambda x: x[None], t)
+        return (add(p),
+                {"left": add(nb["left"]), "right": add(nb["right"])})
+
+    return per_silo
+
+
+def lower_state(name: str, arch: str, active_left: bool,
+                active_right: bool):
+    path = OUT / f"D_{name}.json"
+    if path.exists():
+        print(f"[fl8] {name}: cached")
+        return json.loads(path.read_text())
+    mesh = make_mesh8()
+    cfg = get_config(arch)
+    shard_ctx.set_specs(act=P("data", None, None),
+                        channels=P("data", None, "model"),
+                        heads=P("data", None, "model", None))
+    pshape = params_shape(cfg)
+    stacked = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((N_SILOS,) + l.shape, l.dtype), pshape)
+    pspec = shrules.param_specs(cfg, stacked, pod_stacked=True, mesh=mesh)
+    bufspec = {"left": pspec, "right": pspec}
+    bufshape = {"left": stacked, "right": stacked}
+
+    step = build_step(cfg, active_left, active_right)
+    podspec = jax.tree.map(lambda s: P("pod"), pspec,
+                           is_leaf=lambda x: isinstance(x, P))
+    smapped = shard_map(
+        step, mesh=mesh,
+        in_specs=(podspec, {"left": podspec, "right": podspec}),
+        out_specs=(podspec, {"left": podspec, "right": podspec}),
+        check_vma=False,
+        axis_names=frozenset({"pod"}))  # pod manual; data/model stay auto
+
+    rep = {"variant": f"D_{name}", "arch": arch,
+           "active": [active_left, active_right]}
+    try:
+        with mesh:
+            in_sh = (shrules.named(mesh, pspec),
+                     shrules.named(mesh, bufspec))
+            comp = jax.jit(smapped, in_shardings=in_sh).lower(
+                stacked, bufshape).compile()
+        coll = hlo_analysis.collective_stats(comp.as_text())
+        mem = comp.memory_analysis()
+        rep.update(status="ok", collectives=coll.summary(),
+                   temp_bytes=mem.temp_size_in_bytes)
+        # pod-axis traffic is exactly the collective-permute bytes
+        rep["pod_permute_bytes"] = coll.bytes_by_kind.get(
+            "collective-permute", 0)
+    except Exception as e:  # noqa: BLE001
+        import traceback
+        rep.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2500:])
+    OUT.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(rep, indent=1))
+    print(f"[fl8] {name}: {rep['status']} "
+          f"permute={rep.get('pod_permute_bytes', 0):.3g}B "
+          f"total={rep.get('collectives', {}).get('total_bytes', 0):.3g}B")
+    return rep
+
+
+def main():
+    arch = "mamba2-370m"
+    lower_state("overlay_full_gossip", arch, True, True)
+    lower_state("half_gossip", arch, True, False)
+    lower_state("isolated_round", arch, False, False)
+
+
+if __name__ == "__main__":
+    main()

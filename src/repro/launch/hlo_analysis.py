@@ -1,0 +1,206 @@
+"""Post-compile HLO analysis: collective bytes with loop-aware weighting.
+
+collective_bytes is NOT in cost_analysis(); we parse the optimized HLO
+text and sum operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute.
+
+A naive text scan counts a while-loop body ONCE, but collectives inside
+a scanned layer stack / microbatch loop execute once per trip. XLA
+annotates every `while` op with backend_config known_trip_count; we
+build the computation call graph (while bodies, fusions, to_apply) and
+weight each computation by the product of enclosing trip counts —
+nested scans (microbatch x layers x kv-blocks) multiply through.
+Validated in tests/test_dryrun_roofline.py on toy loops.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_WHILE_BODY = re.compile(r"while\(.*?body=\s*%?([\w\.\-]+)")
+_WHILE_COND = re.compile(r"while\(.*?condition=\s*%?([\w\.\-]+)")
+_TRIP = re.compile(r'known_trip_count[^}]*"n":"(\d+)"')
+_CONST_TRIP = re.compile(r"s(?:32|64)\[\]\s+constant\((\d+)\)")
+_CALLS = re.compile(r"(?:calls|to_apply)=\s*%?([\w\.\-]+)")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """'bf16[16,2048]{1,0}' -> byte size."""
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    nbytes = _DTYPE_BYTES.get(dt)
+    if nbytes is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nbytes
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    """computation name -> its lines."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if not stripped:
+            continue
+        # a computation header: "%name (params...) -> ... {" or
+        # "ENTRY %name (...) ... {" — never contains '=' before '{'
+        if stripped.endswith("{") and "=" not in stripped.split("{")[0]:
+            m = _COMP_HDR.match(stripped)
+            if m:
+                cur = m.group(2)
+                comps[cur] = [line]
+                continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _call_graph(comps: dict[str, list[str]]):
+    """edges: parent -> [(child, weight)] where weight = trip count for
+
+    while bodies, 1 for ordinary calls/fusions."""
+    edges: dict[str, list] = defaultdict(list)
+    for parent, lines in comps.items():
+        for line in lines:
+            if " while(" in line or line.strip().startswith("%while") or \
+               re.search(r"=\s*\(?.*while\(", line):
+                mb = _WHILE_BODY.search(line)
+                if mb:
+                    trips = 1
+                    mt = _TRIP.search(line)
+                    if mt:
+                        trips = int(mt.group(1))
+                    else:
+                        # fall back: constant in the condition body
+                        mc = _WHILE_COND.search(line)
+                        if mc and mc.group(1) in comps:
+                            consts = [int(c) for c in _CONST_TRIP.findall(
+                                "\n".join(comps[mc.group(1)]))]
+                            if consts:
+                                trips = max(consts)
+                    edges[parent].append((mb.group(1), trips))
+                    continue
+            for m in _CALLS.finditer(line):
+                child = m.group(1)
+                if child in comps:
+                    edges[parent].append((child, 1))
+    return edges
+
+
+def _multipliers(comps, edges) -> dict[str, int]:
+    """multiplier(comp) = sum over call sites of parent_mult * weight."""
+    parents: dict[str, list] = defaultdict(list)
+    for p, kids in edges.items():
+        for child, w in kids:
+            parents[child].append((p, w))
+
+    memo: dict[str, int] = {}
+
+    def mult(name: str, stack=()) -> int:
+        if name in memo:
+            return memo[name]
+        if name in stack:  # defensive: no recursion expected in HLO
+            return 1
+        ps = parents.get(name)
+        if not ps:
+            memo[name] = 1  # entry or unreferenced
+            return 1
+        total = 0
+        for p, w in ps:
+            total += mult(p, stack + (name,)) * w
+        memo[name] = max(total, 1)
+        return memo[name]
+
+    return {name: mult(name) for name in comps}
+
+
+def _collect_ops(lines):
+    """Yield (kind, operand_bytes) for collectives in one computation."""
+    for line in lines:
+        for kind in _COLLECTIVES:
+            m = re.search(rf"=\s*(\S+)\s+{kind}(?:-start)?\((.*?)\)", line)
+            if m:
+                total = 0
+                for om in re.finditer(r"(\w+\[[\d,]*\])", m.group(2)):
+                    total += shape_bytes(om.group(1))
+                if total == 0:
+                    for om in re.finditer(r"(\w+\[[\d,]*\])", m.group(1)):
+                        total += shape_bytes(om.group(1))
+                yield kind, total
+                break
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict
+    count_by_kind: dict
+    total_bytes: int
+    details: list
+
+    def summary(self) -> dict:
+        return {"total_bytes": self.total_bytes,
+                "by_kind": dict(self.bytes_by_kind),
+                "counts": dict(self.count_by_kind)}
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    comps = _split_computations(hlo_text)
+    edges = _call_graph(comps)
+    mults = _multipliers(comps, edges)
+
+    bytes_by_kind: dict = defaultdict(int)
+    count_by_kind: dict = defaultdict(int)
+    details = []
+    total = 0
+    for name, lines in comps.items():
+        mult = mults.get(name, 1)
+        for kind, nbytes in _collect_ops(lines):
+            weighted = nbytes * mult
+            bytes_by_kind[kind] += weighted
+            count_by_kind[kind] += mult
+            total += weighted
+            details.append({"comp": name, "kind": kind, "bytes": nbytes,
+                            "mult": mult})
+    return CollectiveStats(bytes_by_kind=dict(bytes_by_kind),
+                           count_by_kind=dict(count_by_kind),
+                           total_bytes=total, details=details)
+
+
+def while_trip_counts(hlo_text: str) -> dict[str, int]:
+    """body computation -> trip count (diagnostic)."""
+    comps = _split_computations(hlo_text)
+    out = {}
+    for parent, lines in comps.items():
+        for line in lines:
+            mb = _WHILE_BODY.search(line)
+            if mb:
+                mt = _TRIP.search(line)
+                if mt:
+                    out[mb.group(1)] = int(mt.group(1))
+                else:
+                    mc = _WHILE_COND.search(line)
+                    consts = []
+                    if mc and mc.group(1) in comps:
+                        consts = [int(c) for c in _CONST_TRIP.findall(
+                            "\n".join(comps[mc.group(1)]))]
+                    out[mb.group(1)] = max(consts) if consts else 1
+    return out

@@ -1,0 +1,40 @@
+"""Production mesh builders.
+
+Single pod: 16x16 = 256 chips, axes ("data", "model").
+Multi pod:  2x16x16 = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis is the FL SILO axis: each pod is one cross-silo federated
+participant holding a full model replica (DESIGN.md §3/§5).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state. The dry-run process sets xla_force_host_platform_device_count
+BEFORE any jax import (see dryrun.py); ordinary processes (tests,
+benches) see 1 device and never call these.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — launch "
+            f"with XLA_FLAGS=--xla_force_host_platform_device_count={n}")
+    dev = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+def make_debug_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
+    """Reduced mesh for CI-scale dry-run tests (8 host devices)."""
+    import jax
+
+    n = int(np.prod(shape))
+    dev = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)

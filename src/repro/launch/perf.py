@@ -1,0 +1,151 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: compile named variants of the three chosen
+
+pairs, extract roofline terms, and log hypothesis → change → before →
+after verdicts to experiments/perf/.
+
+Pairs (EXPERIMENTS.md §Perf):
+  A granite_moe_1b × train_4k (single)  — worst collective/compute ratio
+  B gemma3_27b × decode_32k  (single)  — most collective-bound
+  C qwen2-7b × train_4k      (multi)   — the paper's technique (FL gossip)
+
+Usage: PYTHONPATH=src python -m repro.launch.perf [--pair A|B|C|all]
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+
+from repro.launch.dryrun import lower_pair  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.roofline import roofline_row  # noqa: E402
+
+OUT = pathlib.Path("experiments/perf")
+
+
+def run_variant(name: str, arch: str, shape: str, *, multi_pod: bool,
+                hypothesis: str, **kw):
+    OUT.mkdir(parents=True, exist_ok=True)
+    path = OUT / f"{name}.json"
+    if path.exists():
+        rep = json.loads(path.read_text())
+        print(f"[perf] {name}: cached")
+        return rep
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rep = lower_pair(arch, shape, mesh, multi_pod=multi_pod, **kw)
+    rep["variant"] = name
+    rep["hypothesis"] = hypothesis
+    if rep["status"] == "ok":
+        row = roofline_row(rep)
+        rep["roofline"] = {"compute_s": row.compute_s,
+                           "memory_s": row.memory_s,
+                           "collective_s": row.collective_s,
+                           "dominant": row.dominant}
+    path.write_text(json.dumps(rep, indent=1))
+    c = rep.get("collectives", {}).get("total_bytes", 0)
+    t = rep.get("memory", {}).get("temp_bytes", 0)
+    print(f"[perf] {name}: {rep['status']} coll={c:.3g}B temp={t:.3g}B "
+          f"roofline={rep.get('roofline')}")
+    return rep
+
+
+def pair_a():
+    """granite_moe_1b × train_4k: drive the collective term down."""
+    base = dict(arch="granite_moe_1b", shape="train_4k", multi_pod=False)
+    run_variant(
+        "A0_base", hypothesis="baseline: microbatch=8 + FSDP", **base)
+    run_variant(
+        "A1_microbatch1",
+        hypothesis=("FSDP weight all-gathers repeat per microbatch; the "
+                    "1.3B model's activations fit without accumulation, "
+                    "so microbatch=1 should cut gather traffic ~8x at "
+                    "equal compute"),
+        microbatch=1, **base)
+    run_variant(
+        "A2_noFSDP",
+        hypothesis=("params are only 2.7GB bf16 (170MB/dev TP-sharded): "
+                    "dropping FSDP removes per-use weight gathers "
+                    "entirely; grads sync via one all-reduce instead — "
+                    "predicted large collective cut, small memory rise"),
+        fsdp_layers=False, **base)
+    run_variant(
+        "A3_noFSDP_mb1",
+        hypothesis="combine A1+A2: the collective floor for this pair",
+        fsdp_layers=False, microbatch=1, **base)
+
+
+def pair_b():
+    """gemma3_27b × decode_32k: serving latency (collective-bound)."""
+    base = dict(arch="gemma3_27b", shape="decode_32k", multi_pod=False)
+    run_variant(
+        "B0_base", hypothesis="baseline: FSDP-sharded weights at decode",
+        **base)
+    run_variant(
+        "B2_kv_seq_shard",
+        hypothesis=("REFUTATION TEST: sequence-sharding the KV cache "
+                    "(flash-decoding layout) instead of head-sharding "
+                    "should LOSE for gemma3 (kv=16 divides the axis): "
+                    "it adds a partial-softmax psum per layer per step"),
+        fsdp_layers=False, kv_seq_shard=True, **base)
+    run_variant(
+        "B1_tp_resident",
+        hypothesis=("decode is one token: FSDP makes every step all-gather "
+                    "~54GB/256 of weights; serving should keep weights "
+                    "TP-resident (fsdp off) — predicted collective "
+                    "collapse to activation reduces only, memory rise "
+                    "to ~3.4GB/dev weights (fits)"),
+        fsdp_layers=False, **base)
+
+
+def pair_c():
+    """qwen2-7b × train_4k multi-pod: the paper's FL gossip itself."""
+    base = dict(arch="qwen2_7b", shape="train_4k", multi_pod=True)
+    run_variant(
+        "C0_base_strong", hypothesis="baseline: dense f32 gossip, strong round",
+        **base)
+    run_variant(
+        "C1_weak_round",
+        hypothesis=("a weak (isolated) multigraph round runs NO cross-pod "
+                    "collective: the per-round floor the schedule "
+                    "amortizes toward (paper's mechanism)"),
+        gossip=False, **base)
+    run_variant(
+        "C3_noFSDP",
+        hypothesis=("the 4.5GB/dev of all-gathers are FSDP weight "
+                    "gathers, not gossip: TP-resident weights (7.6B "
+                    "bf16 = 0.95GB/dev) should cut total collective "
+                    "bytes several-fold; grads sync via f32 all-reduce "
+                    "instead"),
+        fsdp_layers=False, **base)
+    run_variant(
+        "C4_noFSDP_bf16grads",
+        hypothesis=("on top of C3, syncing gradients in bf16 instead of "
+                    "f32 should halve the remaining data-axis grad "
+                    "all-reduce bytes (stochastic-rounding-free bf16 "
+                    "grad sync is standard practice at this scale)"),
+        fsdp_layers=False, grad_dtype="bfloat16", **base)
+    run_variant(
+        "C2_gossip_bf16",
+        hypothesis=("baseline einsum upcasts params to f32 BEFORE the "
+                    "pod all-gather — gathering bf16 and accumulating "
+                    "locally in f32 halves cross-pod bytes at equal "
+                    "numerics (f32 accumulate)"),
+        gossip_dtype="bfloat16", **base)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", default="all", choices=["A", "B", "C", "all"])
+    args = ap.parse_args()
+    if args.pair in ("A", "all"):
+        pair_a()
+    if args.pair in ("B", "all"):
+        pair_b()
+    if args.pair in ("C", "all"):
+        pair_c()
+
+
+if __name__ == "__main__":
+    main()

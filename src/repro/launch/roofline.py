@@ -1,0 +1,310 @@
+"""Roofline analysis: three terms per (arch x shape x mesh).
+
+    compute_s    = FLOPs / (chips * 197e12)          [bf16 peak]
+    memory_s     = HBM bytes / (chips * 819e9)
+    collective_s = collective bytes / (chips * 50e9) [per ICI link]
+
+FLOPs/bytes sources — two estimators, cross-validated:
+  * measured: compiled.cost_analysis(). CAVEAT (verified empirically,
+    see tests/test_roofline.py): XLA counts a while-loop body ONCE, so
+    scanned layer stacks / KV-block scans / SSD chunk scans are
+    undercounted. We therefore report the measured number AND
+  * analytic: exact matmul-term formulas per architecture family below
+    (attention context averaging for causal/windowed masks, active-only
+    MoE flops, SSD dual-form terms), validated against cost_analysis on
+    REDUCED UNROLLED configs where XLA's count is complete.
+
+collective bytes come from the HLO parse (launch/hlo_analysis.py) which
+IS trip-count aware; the per-device operand bytes are multiplied by the
+chip count for the global figure.
+
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per the brief; the
+ratio MODEL_FLOPS / FLOPs_total exposes remat/attention/padding
+overheads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.specs import SHAPES, InputShape
+from repro.models.config import ModelConfig
+from repro.models.frontends import prefix_tokens
+from repro.models.transformer import layer_windows, num_shared_attn_apps
+
+PEAK_FLOPS = 197e12      # bf16 per chip (v5e)
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link
+CHIPS = {"single": 256, "multi": 512}
+
+
+# ---------------------------------------------------------------------------
+# analytic FLOPs
+# ---------------------------------------------------------------------------
+
+
+def _avg_ctx(seq: int, window: int) -> float:
+    """Mean attended context per query under a causal (+window) mask."""
+    if window and window < seq:
+        # first `window` positions grow linearly, the rest see `window`
+        ramp = window * (window + 1) / 2
+        return (ramp + (seq - window) * window) / seq
+    return (seq + 1) / 2
+
+
+def _attn_flops(cfg: ModelConfig, tokens: float, seq: int,
+                window: int) -> float:
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    proj = 2 * tokens * d * (qd + 2 * kvd) + 2 * tokens * qd * d
+    ctx = _avg_ctx(seq, window)
+    attn = 4 * tokens * ctx * qd  # scores + AV
+    return proj + attn
+
+
+def _mlp_flops(cfg: ModelConfig, tokens: float) -> float:
+    return 6 * tokens * cfg.d_model * cfg.d_ff
+
+
+def _moe_flops(cfg: ModelConfig, tokens: float) -> float:
+    route = 2 * tokens * cfg.d_model * cfg.num_experts
+    act = 6 * tokens * cfg.experts_per_token * cfg.d_model * cfg.expert_d_ff
+    return route + act
+
+
+def _mamba_flops(cfg: ModelConfig, tokens: float) -> float:
+    d, di, ns, nh, hp = (cfg.d_model, cfg.ssm_inner, cfg.ssm_state,
+                         cfg.ssm_heads, cfg.ssm_head_dim)
+    q = cfg.ssm_chunk
+    proj = 2 * tokens * d * (2 * di + 2 * ns + nh)
+    conv = 2 * tokens * cfg.ssm_conv * (di + 2 * ns)
+    # SSD dual form, per token: scores 2*Q*ns ; y_diag 2*Q*nh*hp ;
+    # y_inter + state inject ~ 4*ns*nh*hp
+    ssd = tokens * (2 * q * ns + 2 * q * nh * hp + 4 * ns * nh * hp)
+    out = 2 * tokens * di * d
+    return proj + conv + ssd + out
+
+
+def forward_flops(cfg: ModelConfig, shape: InputShape, *,
+                  include_unembed: bool = True,
+                  last_only: bool = False) -> float:
+    b, s = shape.global_batch, shape.seq_len
+    p = prefix_tokens(cfg)
+    s_eff = s + p
+    tokens = float(b) * s_eff
+    wins = layer_windows(cfg)
+    total = 0.0
+    if cfg.family in ("dense", "vlm", "audio"):
+        for w in wins:
+            total += _attn_flops(cfg, tokens, s_eff, int(w))
+            total += _mlp_flops(cfg, tokens)
+    elif cfg.family == "moe":
+        for w in wins:
+            total += _attn_flops(cfg, tokens, s_eff, int(w))
+            total += _moe_flops(cfg, tokens)
+    elif cfg.family == "ssm":
+        total += cfg.num_layers * _mamba_flops(cfg, tokens)
+    elif cfg.family == "hybrid":
+        total += cfg.num_layers * _mamba_flops(cfg, tokens)
+        apps = num_shared_attn_apps(cfg)
+        total += apps * (_attn_flops(cfg, tokens, s_eff, cfg.sliding_window)
+                         + _mlp_flops(cfg, tokens))
+    if include_unembed:
+        un_tokens = float(b) if last_only else tokens
+        total += 2 * un_tokens * cfg.d_model * cfg.vocab_size
+    return total
+
+
+def train_flops(cfg: ModelConfig, shape: InputShape, *,
+                remat: bool = True) -> float:
+    """fwd (1x) + bwd (2x) + remat recompute (1x) = 4x forward matmuls."""
+    f = forward_flops(cfg, shape)
+    return f * (4.0 if remat else 3.0)
+
+
+def decode_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    """One decode step: B tokens, attention against the live context."""
+    b, s = shape.global_batch, shape.seq_len
+    tokens = float(b)
+    wins = layer_windows(cfg)
+    total = 0.0
+
+    def attn_dec(window):
+        ctx = min(window, s) if window else s
+        d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+        return (2 * tokens * d * (qd + 2 * kvd) + 2 * tokens * qd * d
+                + 4 * tokens * ctx * qd)
+
+    if cfg.family in ("dense", "vlm", "audio"):
+        for w in wins:
+            total += attn_dec(int(w)) + _mlp_flops(cfg, tokens)
+    elif cfg.family == "moe":
+        for w in wins:
+            total += attn_dec(int(w)) + _moe_flops(cfg, tokens)
+    elif cfg.family == "ssm":
+        # recurrent step: 2*ns*nh*hp state update + projections
+        d, di, ns, nh, hp = (cfg.d_model, cfg.ssm_inner, cfg.ssm_state,
+                             cfg.ssm_heads, cfg.ssm_head_dim)
+        per = (2 * tokens * d * (2 * di + 2 * ns + nh)
+               + 4 * tokens * ns * nh * hp + 2 * tokens * di * d)
+        total += cfg.num_layers * per
+    elif cfg.family == "hybrid":
+        d, di, ns, nh, hp = (cfg.d_model, cfg.ssm_inner, cfg.ssm_state,
+                             cfg.ssm_heads, cfg.ssm_head_dim)
+        per = (2 * tokens * d * (2 * di + 2 * ns + nh)
+               + 4 * tokens * ns * nh * hp + 2 * tokens * di * d)
+        total += cfg.num_layers * per
+        total += num_shared_attn_apps(cfg) * (
+            attn_dec(cfg.sliding_window) + _mlp_flops(cfg, tokens))
+    total += 2 * tokens * cfg.d_model * cfg.vocab_size  # unembed
+    return total
+
+
+def analytic_flops(cfg: ModelConfig, shape: InputShape) -> float:
+    if shape.mode == "train":
+        return train_flops(cfg, shape)
+    if shape.mode == "prefill":
+        return forward_flops(cfg, shape, last_only=True)
+    return decode_flops(cfg, shape)
+
+
+# ---------------------------------------------------------------------------
+# analytic HBM bytes (coarse, documented model)
+# ---------------------------------------------------------------------------
+
+
+def _dtype_bytes(cfg: ModelConfig) -> int:
+    return 2 if cfg.dtype == "bfloat16" else 4
+
+
+def analytic_bytes(cfg: ModelConfig, shape: InputShape) -> float:
+    n = cfg.param_count()
+    na = cfg.active_param_count()
+    wb = _dtype_bytes(cfg)
+    b, s = shape.global_batch, shape.seq_len
+    tokens = float(b) * (s + prefix_tokens(cfg))
+    if shape.mode == "train":
+        # weights: fwd + bwd + remat reads (3x), grad writes, AdamW
+        # state read+write f32 (m, v) + param update
+        weights = n * wb * 3 + n * wb + n * (8 + 8 + 4 + 4)
+        # activations: ~6 tensor r/w per layer boundary
+        acts = cfg.num_layers * tokens * cfg.d_model * wb * 6
+        return weights + acts
+    if shape.mode == "prefill":
+        weights = n * wb
+        acts = cfg.num_layers * tokens * cfg.d_model * wb * 4
+        kv = cfg.num_layers * tokens * 2 * cfg.kv_dim * wb  # cache writes
+        return weights + acts + kv
+    # decode: stream active weights once + read the KV/ssm state
+    weights = na * wb
+    kv = 0.0
+    if cfg.uses_attention and cfg.num_heads:
+        wins = layer_windows(cfg)
+        for w in wins if cfg.family != "hybrid" else []:
+            ctx = min(int(w), s) if w else s
+            kv += float(b) * ctx * 2 * cfg.kv_dim * wb
+        if cfg.family == "hybrid":
+            ctx = min(cfg.sliding_window, s) if cfg.sliding_window else s
+            kv += num_shared_attn_apps(cfg) * float(b) * ctx * 2 * cfg.kv_dim * wb
+    if cfg.uses_ssm:
+        kv += (cfg.num_layers * float(b) * cfg.ssm_heads * cfg.ssm_head_dim
+               * cfg.ssm_state * 4 * 2)  # read + write f32 state
+    return weights + kv
+
+
+# ---------------------------------------------------------------------------
+# report assembly
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    status: str
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    dominant: str = ""
+    model_flops: float = 0.0
+    flops_total: float = 0.0
+    flops_measured_raw: float = 0.0
+    useful_ratio: float = 0.0
+    note: str = ""
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def model_flops_6nd(cfg: ModelConfig, shape: InputShape) -> float:
+    tokens = float(shape.global_batch) * (
+        shape.seq_len if shape.mode != "decode" else 1)
+    n = cfg.active_param_count()
+    mult = 6 if shape.mode == "train" else 2
+    return mult * n * tokens
+
+
+def roofline_row(report: dict) -> RooflineRow:
+    arch, shape_name = report["arch"], report["shape"]
+    mesh = report["mesh"]
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    row = RooflineRow(arch=arch, shape=shape_name, mesh=mesh,
+                      status=report["status"])
+    if report["status"] != "ok":
+        row.note = report.get("reason", report.get("error", ""))[:200]
+        return row
+    chips = CHIPS[mesh]
+    fl = analytic_flops(cfg, shape)
+    by = analytic_bytes(cfg, shape)
+    coll_global = report["collectives"]["total_bytes"] * chips
+    row.flops_total = fl
+    row.flops_measured_raw = report["cost"]["flops"] * chips
+    row.compute_s = fl / (chips * PEAK_FLOPS)
+    row.memory_s = by / (chips * HBM_BW)
+    row.collective_s = report["collectives"]["total_bytes"] / LINK_BW
+    terms = {"compute": row.compute_s, "memory": row.memory_s,
+             "collective": row.collective_s}
+    row.dominant = max(terms, key=terms.get)
+    row.model_flops = model_flops_6nd(cfg, shape)
+    row.useful_ratio = row.model_flops / max(fl, 1.0)
+    return row
+
+
+def load_reports(dryrun_dir: str | pathlib.Path) -> list[dict]:
+    d = pathlib.Path(dryrun_dir)
+    return [json.loads(p.read_text()) for p in sorted(d.glob("*.json"))]
+
+
+def table(dryrun_dir: str | pathlib.Path) -> list[RooflineRow]:
+    return [roofline_row(r) for r in load_reports(dryrun_dir)]
+
+
+def markdown_table(rows: list[RooflineRow]) -> str:
+    hdr = ("| arch | shape | mesh | status | compute_s | memory_s | "
+           "collective_s | dominant | 6ND/FLOPs | note |")
+    sep = "|" + "---|" * 10
+    out = [hdr, sep]
+    for r in rows:
+        if r.status == "ok":
+            out.append(
+                f"| {r.arch} | {r.shape} | {r.mesh} | ok "
+                f"| {r.compute_s:.4f} | {r.memory_s:.4f} "
+                f"| {r.collective_s:.4f} | **{r.dominant}** "
+                f"| {r.useful_ratio:.2f} | |")
+        else:
+            out.append(f"| {r.arch} | {r.shape} | {r.mesh} | {r.status} "
+                       f"| | | | | | {r.note[:80]} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    import sys
+
+    d = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    print(markdown_table(table(d)))

@@ -1,0 +1,233 @@
+"""Sharding rules: parameter / batch / cache PartitionSpecs per family.
+
+Baseline layout (the §Perf hillclimbs start from here):
+  * tensor parallel over "model": attention head projections, MLP ffn
+    dim, MoE expert axis (expert parallel), Mamba z/x/dt head dims;
+  * FSDP over "data": the stacked LAYER axis of every block param is
+    sharded over the data axis (per-layer all-gather inside the scan —
+    ZeRO-3-style, what makes 27B fit);
+  * embeddings: vocab axis over ("data", "model");
+  * batch over "data" (and "pod" when multi-pod serving);
+  * FL (multi-pod train): every leaf gains a leading silo axis sharded
+    over "pod" — each pod holds its own replica, gossip syncs them.
+
+Non-divisible dims (e.g. qwen2's 28 heads on 16-way model axis) are
+legal: GSPMD pads internally; the padding waste shows up in the roofline
+MODEL_FLOPS ratio, which is exactly where we want to see it.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+Params = Any
+
+# rules: param name -> spec WITHOUT the stacked layer axis. Megatron/
+# MaxText layout: "model" on the TP dim, "data" (FSDP/ZeRO-3) on the
+# OTHER dim — d_model divides 16 for every assigned arch, so FSDP never
+# degrades; indivisible TP dims are weakened by fix_spec.
+_ATTN = {
+    "wq": P("data", "model"), "wk": P("data", "model"),
+    "wv": P("data", "model"), "wo": P("model", "data"),
+    "bq": P("model"), "bk": P("model"), "bv": P("model"),
+}
+_MLP = {"w_gate": P("data", "model"), "w_up": P("data", "model"),
+        "w_down": P("model", "data")}
+_MOE = {"router": P("data", None),
+        "w_gate": P("model", "data", None), "w_up": P("model", "data", None),
+        "w_down": P("model", None, "data")}
+_MAMBA = {"w_zx": P("data", "model"), "w_bc": P("data", None),
+          "w_dt": P("data", "model"), "conv_x": P(None, "model"),
+          "conv_bc": P(None, None), "dt_bias": P("model"),
+          "A_log": P("model"), "D": P("model"),
+          "out_proj": P("model", "data")}
+_NORM = {"scale": P(None)}
+
+
+def _leaf_spec(path: tuple[str, ...]) -> P:
+    name = path[-1]
+    parent = path[-2] if len(path) >= 2 else ""
+    if parent == "embed" or name == "tok":
+        if name == "tok":
+            return P("model", "data")
+        if name == "unembed":
+            return P("data", "model")
+    if parent == "attn":
+        return _ATTN[name]
+    if parent == "mlp":
+        return _MLP[name]
+    if parent == "moe":
+        return _MOE[name]
+    if parent == "mamba":
+        return _MAMBA[name]
+    if name == "scale":
+        return P(None)
+    raise KeyError(f"no sharding rule for param path {path}")
+
+
+def _path_names(kp) -> tuple[str, ...]:
+    out = []
+    for k in kp:
+        if isinstance(k, jax.tree_util.DictKey):
+            out.append(str(k.key))
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+def _axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def fix_spec(spec: P, shape: tuple[int, ...], sizes: dict) -> P:
+    """Weaken a spec until every sharded dim divides evenly.
+
+    pjit INPUT shardings require exact divisibility (GSPMD pads
+    intermediates, not arguments). Axes are dropped from the END of each
+    dim's tuple first — rules append the FSDP axis last, so TP survives
+    and only the data-sharding degrades (e.g. mamba2's vocab 50280 is
+    16-indivisible -> replicated embed)."""
+    parts = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            parts.append(None)
+            continue
+        axes = list(entry) if isinstance(entry, tuple) else [entry]
+        while axes:
+            total = 1
+            for a in axes:
+                total *= sizes[a]
+            if shape[i] % total == 0:
+                break
+            axes.pop()  # drop the last (lowest-priority) axis
+        parts.append(tuple(axes) if len(axes) > 1 else
+                     (axes[0] if axes else None))
+    parts += [None] * (len(shape) - len(parts))
+    return P(*parts)
+
+
+def param_specs(cfg: ModelConfig, params_shape: Params, *,
+                fsdp_layers: bool = True, pod_stacked: bool = False,
+                mesh=None) -> Params:
+    """PartitionSpec pytree matching a params(-shape) pytree.
+
+    `params_shape` may be real params or a ShapeDtypeStruct tree.
+    fsdp_layers=True upgrades each weight's TP dim "model" to
+    ("model", "data") — ZeRO-3-style full sharding (the per-use
+    all-gather over "data" is the FSDP cost, visible in §Roofline).
+    Pass `mesh` to apply the divisibility fixup.
+    """
+
+    def spec_for(kp, leaf):
+        names = _path_names(kp)
+        in_blocks = "blocks" in names
+        model_names = tuple(n for n in names if n not in ("blocks",))
+        base = _leaf_spec(model_names)
+        parts = list(base)
+        if not fsdp_layers:
+            # pure-TP variant: strip the FSDP axis
+            parts = [None if e == "data" else
+                     (tuple(a for a in e if a != "data") or None
+                      if isinstance(e, tuple) else e) for e in parts]
+        if in_blocks:
+            parts = [None] + parts  # stacked layer axis: replicated
+        if pod_stacked:
+            parts = ["pod"] + parts
+        assert len(parts) == leaf.ndim, (names, parts, leaf.shape)
+        sp = P(*parts)
+        if mesh is not None:
+            sp = fix_spec(sp, leaf.shape, _axis_sizes(mesh))
+        return sp
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs(mode: str, *, multi_pod: bool, fl: bool,
+                has_prefix: bool) -> dict:
+    """Specs for the step's data inputs."""
+    if fl:
+        # leading silo axis over pod; per-silo batch over data
+        tok = P("pod", "data", None)
+        pre = P("pod", "data", None, None)
+    elif multi_pod:
+        tok = P(("pod", "data"), None)
+        pre = P(("pod", "data"), None, None)
+    else:
+        tok = P("data", None)
+        pre = P("data", None, None)
+    out = {"tokens": tok, "labels": tok}
+    if has_prefix:
+        out["prefix_embeds"] = pre
+    return out
+
+
+def decode_cache_specs(cfg: ModelConfig, state_shape, *, batch: int,
+                       multi_pod: bool, mesh=None,
+                       kv_seq_shard: bool = False) -> Any:
+    """Specs for DecodeState: KV caches (L', B, S, Hkv, hd), ssm states.
+
+    Layout decisions (divisibility-aware when `mesh` given):
+      * batch over "data" (+"pod" multi-pod); batch==1 (long_500k) moves
+        the SEQUENCE onto "data" instead (flash-decoding layout);
+      * KV heads over "model" when Hkv divides the axis, otherwise the
+        cache SEQUENCE goes over "model" (GQA archs have 1..8 kv heads
+        — sequence sharding is the standard fallback);
+      * SSM state heads over "model".
+    """
+    daxis = ("pod", "data") if multi_pod else "data"
+    big_batch = batch > 1
+    sizes = _axis_sizes(mesh) if mesh is not None else {"model": 16,
+                                                        "data": 16, "pod": 2}
+    msize = sizes["model"]
+
+    def spec_of(leaf):
+        shp = leaf.shape
+        if len(shp) == 5:  # KV cache (L', B, S, Hkv, hd)
+            heads_ok = (shp[3] % msize == 0) and not kv_seq_shard
+            if big_batch:
+                sp = (P(None, daxis, None, "model", None) if heads_ok
+                      else P(None, daxis, "model", None, None))
+            else:
+                sp = (P(None, None, daxis, "model", None) if heads_ok
+                      else P(None, None, (daxis, "model")
+                             if not isinstance(daxis, tuple)
+                             else tuple(list(daxis) + ["model"]),
+                             None, None))
+            return fix_spec(sp, shp, sizes) if mesh is not None else sp
+        if len(shp) == 4:  # conv state (L, B, K-1, C)
+            sp = (P(None, daxis, None, "model") if big_batch
+                  else P(None, None, None, "model"))
+            return fix_spec(sp, shp, sizes) if mesh is not None else sp
+        if len(shp) == 0:
+            return P()
+        raise ValueError(f"unexpected cache leaf shape {shp}")
+
+    def spec_ssm(leaf):
+        shp = leaf.shape
+        if len(shp) == 5:  # (L, B, nh, hp, ns)
+            sp = (P(None, daxis, "model", None, None) if big_batch
+                  else P(None, None, "model", None, None))
+            return fix_spec(sp, shp, sizes) if mesh is not None else sp
+        return spec_of(leaf)
+
+    from repro.models.transformer import DecodeState
+
+    caches = state_shape.caches
+    specs: dict = {}
+    if "kv" in caches:
+        specs["kv"] = [jax.tree.map(spec_of, g) for g in caches["kv"]]
+    if "ssm" in caches:
+        specs["ssm"] = jax.tree.map(spec_ssm, caches["ssm"])
+    if "shared_kv" in caches:
+        specs["shared_kv"] = jax.tree.map(spec_of, caches["shared_kv"])
+    return DecodeState(caches=specs, position=P())

@@ -1,0 +1,91 @@
+"""Assigned input shapes + ShapeDtypeStruct stand-ins for the dry-run.
+
+No device allocation happens here: params, batches, and decode caches
+are all jax.ShapeDtypeStruct trees (weak-type-correct), produced with
+jax.eval_shape over the real constructors.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+from repro.models.frontends import prefix_tokens
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    mode: str         # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", "train", 4_096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32_768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524_288, 1),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """long_500k only for sub-quadratic archs (DESIGN.md §4)."""
+    if shape.name == "long_500k" and not cfg.supports_long_decode:
+        return False, (f"{cfg.name} is pure full-attention; 500k decode is "
+                       "quadratic — skipped per DESIGN.md §4")
+    return True, ""
+
+
+def params_shape(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(tf.init_params, cfg), jax.random.PRNGKey(0))
+
+
+def batch_shape(cfg: ModelConfig, shape: InputShape, *,
+                fl_silos: int = 0) -> dict:
+    """ShapeDtypeStructs for a train/prefill batch.
+
+    fl_silos > 0 prepends the silo axis (multi-pod FL training).
+    """
+    b, s = shape.global_batch, shape.seq_len
+    lead = (fl_silos, b // fl_silos) if fl_silos else (b,)
+    out = {
+        "tokens": jax.ShapeDtypeStruct(lead + (s,), jnp.int32),
+        "labels": jax.ShapeDtypeStruct(lead + (s,), jnp.int32),
+    }
+    p = prefix_tokens(cfg)
+    if p:
+        out["prefix_embeds"] = jax.ShapeDtypeStruct(
+            lead + (p, cfg.d_model), jnp.dtype(cfg.dtype))
+    return out
+
+
+def decode_shapes(cfg: ModelConfig, shape: InputShape):
+    """(tokens, DecodeState) ShapeDtypeStructs for one decode step."""
+    b, s = shape.global_batch, shape.seq_len
+    tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    state = jax.eval_shape(
+        functools.partial(tf.init_decode_state, cfg, b, s,
+                          dtype=jnp.bfloat16))
+    return tokens, state
+
+
+def input_specs(arch: str, shape_name: str, *, fl_silos: int = 0):
+    """Public entry: ShapeDtypeStruct stand-ins for every model input."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(why)
+    if shape.mode in ("train", "prefill"):
+        return {"params": params_shape(cfg),
+                "batch": batch_shape(cfg, shape, fl_silos=fl_silos)}
+    tokens, state = decode_shapes(cfg, shape)
+    return {"params": params_shape(cfg), "tokens": tokens, "state": state}

@@ -1,0 +1,213 @@
+"""Grouped-query attention: training forward and single-token decode.
+
+Two implementations selected by `impl`:
+  * "reference" — pure jnp einsum + masked softmax. Used for CPU smoke
+    tests and for dry-run lowering/cost-analysis (XLA attention FLOPs
+    equal the kernel's useful FLOPs).
+  * "pallas" — repro.kernels.flash_attention (VMEM-tiled TPU kernel;
+    validated against the reference in interpret mode).
+
+Masking supports causal, sliding-window (gemma3 local layers), and a
+bidirectional prefix (paligemma image tokens attend fully).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import shard_ctx
+from repro.models.config import ModelConfig
+from repro.models.layers import Params, _dense_init, apply_rope
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg: ModelConfig, dtype) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    p = {
+        "wq": _dense_init(k1, (d, qd), dtype=dtype),
+        "wk": _dense_init(k2, (d, kvd), dtype=dtype),
+        "wv": _dense_init(k3, (d, kvd), dtype=dtype),
+        "wo": _dense_init(k4, (qd, d), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((qd,), dtype)
+        p["bk"] = jnp.zeros((kvd,), dtype)
+        p["bv"] = jnp.zeros((kvd,), dtype)
+    return p
+
+
+def _project_qkv(p: Params, cfg: ModelConfig, x: jax.Array):
+    b, s, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = shard_ctx.constrain_heads(
+        q.reshape(b, s, cfg.num_heads, cfg.head_dim))
+    k = shard_ctx.constrain_heads(
+        k.reshape(b, s, cfg.num_kv_heads, cfg.head_dim))
+    v = shard_ctx.constrain_heads(
+        v.reshape(b, s, cfg.num_kv_heads, cfg.head_dim))
+    return q, k, v
+
+
+def build_mask(seq: int, *, window: int = 0, prefix: int = 0,
+               dtype=jnp.float32) -> jax.Array:
+    """(seq, seq) additive mask: causal, optional window, optional prefix."""
+    i = jnp.arange(seq)[:, None]
+    j = jnp.arange(seq)[None, :]
+    ok = j <= i
+    if window > 0:
+        ok &= (i - j) < window
+    if prefix > 0:
+        ok |= (i < prefix) & (j < prefix)  # bidirectional image/frame prefix
+    return jnp.where(ok, 0.0, NEG_INF).astype(dtype)
+
+
+def reference_attention(q, k, v, mask: jax.Array | None) -> jax.Array:
+    """q (B,S,Hq,hd), k/v (B,S,Hkv,hd) -> (B,S,Hq,hd). Pure-jnp oracle."""
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    qg = q.reshape(b, s, hkv, group, hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k) / np.sqrt(hd)
+    scores = scores.astype(jnp.float32)
+    if mask is not None:
+        scores = scores + mask
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, s, hq, hd)
+
+
+def chunked_attention(q, k, v, *, window=0, prefix=0, block: int = 512,
+                      unroll: int | bool = 1) -> jax.Array:
+    """Flash-style attention in pure XLA: lax.scan over KV blocks with an
+
+    online softmax. Memory is O(S * block) instead of O(S^2) — this is
+    the lowering path for the 32k/500k dry-run shapes (the Pallas kernel
+    is the TPU-runtime path; this is its XLA twin for GSPMD lowering and
+    CPU execution). `window` may be a traced scalar (gemma3 mixed
+    stacks). Layout: q (B,S,Hq,hd), k/v (B,S,Hkv,hd).
+    """
+    b, s, hq, hd = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    block = min(block, s)
+    pad = (-s) % block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nk = (s + pad) // block
+    qg = q.reshape(b, s, hkv, g, hd).astype(jnp.float32)
+    kb = jnp.moveaxis(k.reshape(b, nk, block, hkv, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nk, block, hkv, hd), 1, 0)
+    scale = 1.0 / np.sqrt(hd)
+    ipos = jnp.arange(s)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kc, vc, ki = inp  # (b, block, hkv, hd), (b, block, hkv, hd), scalar
+        jpos = ki * block + jnp.arange(block)
+        sc = jnp.einsum("bqhgd,bkhd->bhgqk", qg,
+                        kc.astype(jnp.float32)) * scale
+        ok = jpos[None, :] <= ipos[:, None]
+        ok &= jnp.where(window > 0,
+                        (ipos[:, None] - jpos[None, :]) < window, True)
+        if prefix > 0:
+            ok |= (ipos[:, None] < prefix) & (jpos[None, :] < prefix)
+        ok &= (jpos < s)[None, :]
+        sc = jnp.where(ok[None, None, None], sc, NEG_INF)
+        m_cur = jnp.max(sc, axis=-1)
+        m_new = jnp.maximum(m, m_cur)
+        safe = m_new > NEG_INF / 2
+        alpha = jnp.where(safe, jnp.exp(m - m_new), 0.0)
+        pmat = jnp.exp(sc - jnp.where(safe, m_new, 0.0)[..., None])
+        pmat = jnp.where(ok[None, None, None], pmat, 0.0)
+        l_new = alpha * l + pmat.sum(-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", pmat, vc.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, s), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, s, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (kb, vb, jnp.arange(nk)), unroll=unroll)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 3, 1).reshape(b, s, hq, hd).astype(q.dtype)
+
+
+def attention(p: Params, cfg: ModelConfig, x: jax.Array, *,
+              window: int = 0, prefix: int = 0,
+              impl: str = "reference") -> jax.Array:
+    """Full-sequence (training / prefill) attention."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x)
+    pos = jnp.arange(s)[None, :]
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(q, k, v, causal=True, window=window,
+                                     prefix=prefix)
+    elif impl == "chunked":
+        out = chunked_attention(q, k, v, window=window, prefix=prefix)
+    else:
+        mask = build_mask(s, window=window, prefix=prefix)
+        out = reference_attention(q, k, v, mask)
+    return out.reshape(b, s, cfg.q_dim) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token against a KV cache)
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                  dtype=jnp.bfloat16, layers: int | None = None) -> Params:
+    """Stacked per-layer KV cache (L, B, S, Hkv, hd)."""
+    l = layers if layers is not None else cfg.num_layers
+    shape = (l, batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_attention(p: Params, cfg: ModelConfig, x: jax.Array,
+                     k_cache: jax.Array, v_cache: jax.Array,
+                     position: jax.Array, *, window: int = 0,
+                     lengths: jax.Array | None = None):
+    """One-token decode. x (B,1,D); caches (B,S,Hkv,hd); position scalar.
+
+    Returns (out (B,1,D), new_k_cache, new_v_cache).
+    """
+    b = x.shape[0]
+    q, k, v = _project_qkv(p, cfg, x)  # (B,1,H,hd)
+    pos = jnp.full((1, 1), position, jnp.int32)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, position, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, position, axis=1)
+
+    s = k_cache.shape[1]
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    group = hq // hkv
+    qg = q.reshape(b, hkv, group, cfg.head_dim)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache) / np.sqrt(cfg.head_dim)
+    scores = scores.astype(jnp.float32)
+    j = jnp.arange(s)
+    ok = j <= position
+    if window > 0:
+        ok &= (position - j) < window
+    if lengths is not None:
+        ok = ok[None, :] & (j[None, :] < lengths[:, None])
+        scores = jnp.where(ok[:, None, None, :], scores, NEG_INF)
+    else:
+        scores = jnp.where(ok[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs, v_cache)
+    out = out.reshape(b, 1, cfg.q_dim) @ p["wo"]
+    return out, k_cache, v_cache

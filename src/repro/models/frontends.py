@@ -1,0 +1,43 @@
+"""Stub modality frontends (the single permitted carve-out, see DESIGN.md).
+
+For VLM (paligemma: SigLIP ViT) and audio (musicgen: EnCodec conv codec)
+architectures we do NOT implement the vision/audio encoder — the brief's
+`input_specs()` contract supplies precomputed patch/frame embeddings of
+the right shape. These helpers define those shapes and generate
+deterministic synthetic embeddings for smoke tests and examples.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+# paligemma: 224x224 / 14px SigLIP patches -> 256 image tokens.
+VLM_PREFIX_TOKENS = 256
+# musicgen: conditioning frames from the text/melody encoder (T5-style),
+# a short prefix of continuous embeddings.
+AUDIO_PREFIX_TOKENS = 64
+
+
+def prefix_tokens(cfg: ModelConfig) -> int:
+    if cfg.frontend == "vision":
+        return cfg.num_prefix_tokens or VLM_PREFIX_TOKENS
+    if cfg.frontend == "audio":
+        return cfg.num_prefix_tokens or AUDIO_PREFIX_TOKENS
+    return 0
+
+
+def prefix_shape(cfg: ModelConfig, batch: int) -> tuple[int, int, int]:
+    return (batch, prefix_tokens(cfg), cfg.d_model)
+
+
+def synthetic_prefix(cfg: ModelConfig, batch: int, seed: int = 0) -> jax.Array:
+    """Deterministic stand-in for encoder outputs (unit-normalized)."""
+    p = prefix_tokens(cfg)
+    if p == 0:
+        raise ValueError(f"{cfg.name} has no frontend")
+    x = jax.random.normal(jax.random.PRNGKey(seed), (batch, p, cfg.d_model))
+    x = x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+    return x.astype(jnp.dtype(cfg.dtype))

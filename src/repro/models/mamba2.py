@@ -1,0 +1,195 @@
+"""Mamba2 (SSD — state-space duality) layer. [arXiv:2405.21060]
+
+Forward uses the chunked SSD algorithm: within-chunk attention-like dual
+form + inter-chunk recurrent state carry, which is also the structure the
+Pallas kernel (repro/kernels/ssd_scan) tiles for VMEM. Decode keeps a
+constant-size recurrent state — this is what makes `long_500k` feasible
+for the ssm/hybrid architectures.
+
+Shapes: d_inner = expand * d_model, heads nh = d_inner / head_dim (hp),
+single B/C group shared across heads (Mamba2 default), state size ns.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import shard_ctx
+from repro.models.config import ModelConfig
+from repro.models.layers import Params, _dense_init
+
+
+def mamba_init(key, cfg: ModelConfig, dtype) -> Params:
+    """Input projection is stored as three separately-shardable pieces:
+
+    w_zx (z and x, head-parallel over the `model` axis), w_bc (B and C,
+    replicated — shared across heads), w_dt (per-head step sizes,
+    head-parallel). A fused (d, 2di+2ns+nh) matrix would force tensor
+    sharding to split mid-segment."""
+    di, ns, nh = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    return {
+        "w_zx": _dense_init(ks[0], (d, 2 * di), dtype=dtype),
+        "w_bc": _dense_init(ks[1], (d, 2 * ns), dtype=dtype),
+        "w_dt": _dense_init(ks[2], (d, nh), dtype=dtype),
+        "conv_x": (jax.random.normal(ks[3], (cfg.ssm_conv, di)) * 0.1
+                   ).astype(dtype),
+        "conv_bc": (jax.random.normal(ks[4], (cfg.ssm_conv, 2 * ns)) * 0.1
+                    ).astype(dtype),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "out_proj": _dense_init(ks[2], (di, d), dtype=dtype),
+    }
+
+
+def _project(cfg: ModelConfig, p: Params, xres: jax.Array):
+    """-> z (…,di), xbc (…,di+2ns), dt (…,nh)."""
+    di = cfg.ssm_inner
+    zx = xres @ p["w_zx"]
+    z, xin = zx[..., :di], zx[..., di:]
+    bc = xres @ p["w_bc"]
+    dt = xres @ p["w_dt"]
+    return z, jnp.concatenate([xin, bc], axis=-1), dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv over seq. xbc (B,S,C), w (K,C).
+
+    If `state` (B,K-1,C) is given (decode), returns (out, new_state).
+    """
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(xbc.shape[:1] + (k - 1,) + xbc.shape[2:], xbc.dtype)
+        full = jnp.concatenate([pad, xbc], axis=1)
+    else:
+        full = jnp.concatenate([state.astype(xbc.dtype), xbc], axis=1)
+    out = sum(full[:, i:i + xbc.shape[1]] * w[i] for i in range(k))
+    new_state = full[:, -(k - 1):]
+    return jax.nn.silu(out), new_state
+
+
+def ssd_reference(x, dt, A, B, C, chunk: int):
+    """Chunked SSD scan (pure-jnp oracle; also the kernel's blueprint).
+
+    x  (b, s, h, p)   per-head inputs
+    dt (b, s, h)      positive step sizes
+    A  (h,)           negative decay rates
+    B  (b, s, n)      input projections (shared across heads)
+    C  (b, s, n)      output projections
+    Returns y (b, s, h, p).
+
+    The whole per-chunk dual-form block lives INSIDE the chunk scan (the
+    same tiling the Pallas kernel uses): peak transients are O(b*Q*Q*h)
+    for ONE chunk, not all of them — this is what keeps the 4k/32k
+    dry-run lowering within HBM.
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    q = chunk
+    assert s % q == 0, f"seq {s} not divisible by chunk {q}"
+    nc = s // q
+
+    xr = jnp.moveaxis(x.reshape(b, nc, q, h, p), 1, 0)     # (nc,b,q,h,p)
+    dtr = jnp.moveaxis(dt.reshape(b, nc, q, h), 1, 0)
+    Br = jnp.moveaxis(B.reshape(b, nc, q, n), 1, 0)
+    Cr = jnp.moveaxis(C.reshape(b, nc, q, n), 1, 0)
+
+    iq = jnp.arange(q)
+    causal = (iq[:, None] >= iq[None, :])[None, :, :, None]  # (1,q,k,1)
+
+    def step(h_prev, inp):
+        xc, dtc, Bc, Cc = inp  # (b,q,h,p), (b,q,h), (b,q,n), (b,q,n)
+        a = dtc * A                       # (b,q,h) negative
+        acs = jnp.cumsum(a, axis=1)       # (b,q,h)
+        dtx = xc * dtc[..., None]         # (b,q,h,p)
+
+        # within-chunk dual form; mask BEFORE exp (positive gaps
+        # overflow and poison gradients through where: inf * 0 = nan)
+        gap = acs[:, :, None, :] - acs[:, None, :, :]  # (b,q,k,h)
+        decay = jnp.exp(jnp.where(causal, gap, -jnp.inf))
+        scores = jnp.einsum("bqn,bkn->bqk", Cc, Bc)
+        y_diag = jnp.einsum("bqk,bqkh,bkhp->bqhp", scores, decay, dtx)
+
+        # contribution of the carried state
+        y_inter = jnp.einsum("bqn,bqh,bhpn->bqhp", Cc,
+                             jnp.exp(acs), h_prev)
+
+        # state update: decay full chunk + inject dt-weighted inputs
+        to_end = jnp.exp(acs[:, -1:, :] - acs)         # (b,q,h)
+        inj = jnp.einsum("bkn,bkh,bkhp->bhpn", Bc, to_end, dtx)
+        h_new = h_prev * jnp.exp(acs[:, -1, :])[..., None, None] + inj
+        return h_new, y_diag + y_inter
+
+    h0 = jnp.zeros((b, h, p, n), x.dtype)
+    _, ys = jax.lax.scan(step, h0, (xr, dtr, Br, Cr))   # ys (nc,b,q,h,p)
+    return jnp.moveaxis(ys, 0, 1).reshape(b, s, h, p)
+
+
+def mamba_forward(p: Params, cfg: ModelConfig, xres: jax.Array, *,
+                  impl: str = "reference") -> jax.Array:
+    """Full-sequence Mamba2 mixer. xres (B,S,D) -> (B,S,D)."""
+    b, s, _ = xres.shape
+    di, ns, nh, hp = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dt = _project(cfg, p, xres)
+    z = shard_ctx.constrain_channels(z)
+    dt = shard_ctx.constrain_channels(dt)
+    conv_w = jnp.concatenate([p["conv_x"], p["conv_bc"]], axis=-1)
+    xbc, _ = _causal_conv(xbc, conv_w)
+    xin = shard_ctx.constrain_heads(xbc[..., :di].reshape(b, s, nh, hp))
+    B = xbc[..., di:di + ns]
+    C = xbc[..., di + ns:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    if impl == "pallas":
+        from repro.kernels.ssd_scan import ops as ssd_ops
+        y = ssd_ops.ssd_scan(xin, dt, A, B, C, chunk=cfg.ssm_chunk)
+    else:
+        y = ssd_reference(xin, dt.astype(xin.dtype), A.astype(xin.dtype),
+                          B, C, chunk=min(cfg.ssm_chunk, s))
+    y = y + xin * p["D"][None, None, :, None].astype(xin.dtype)
+    y = shard_ctx.constrain_channels(y.reshape(b, s, di)) * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# Decode: constant-size recurrent state
+# ---------------------------------------------------------------------------
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32,
+                   layers: int | None = None) -> Params:
+    l = layers if layers is not None else cfg.num_layers
+    nh, hp, ns = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.ssm_inner + 2 * ns
+    return {
+        "ssm": jnp.zeros((l, batch, nh, hp, ns), dtype),
+        "conv": jnp.zeros((l, batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }
+
+
+def mamba_decode(p: Params, cfg: ModelConfig, xres: jax.Array,
+                 ssm_state: jax.Array, conv_state: jax.Array):
+    """One-token decode. xres (B,1,D); ssm_state (B,nh,hp,ns);
+
+    conv_state (B,K-1,conv_dim). Returns (out, ssm_state, conv_state)."""
+    b = xres.shape[0]
+    di, ns, nh, hp = cfg.ssm_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dt = _project(cfg, p, xres)
+    conv_w = jnp.concatenate([p["conv_x"], p["conv_bc"]], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, conv_w, state=conv_state)
+    xin = xbc[..., :di].reshape(b, nh, hp)
+    B = xbc[:, 0, di:di + ns]
+    C = xbc[:, 0, di + ns:]
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A)  # (B,nh)
+    upd = jnp.einsum("bhp,bn,bh->bhpn", xin.astype(jnp.float32), B.astype(jnp.float32), dt)
+    ssm_state = ssm_state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", ssm_state, C.astype(jnp.float32))
+    y = y.astype(xres.dtype) + xin * p["D"][None, :, None].astype(xin.dtype)
+    y = y.reshape(b, 1, di) * jax.nn.silu(z)
+    return y @ p["out_proj"], ssm_state, conv_state

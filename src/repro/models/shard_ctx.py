@@ -1,0 +1,51 @@
+"""Activation-sharding context (set by the launch layer, no-op otherwise).
+
+GSPMD needs anchors: without them it either propagates FSDP weight
+shardings into the scan carry (involuntary remat) or replicates the
+wide per-block internals (SSD decay blocks, attention heads, MLP ffn).
+The launch layer sets three specs:
+
+  act      — (B, S, D) block-boundary activations: P(dp, None, None)
+  channels — (B, S, C) wide interiors (mlp ffn, mamba z/x, dt):
+             P(dp, None, "model")  (Megatron TP)
+  heads    — (B, S, H, hd) per-head tensors (q/k/v, ssd x):
+             P(dp, None, "model", None)
+
+Model code calls constrain_* unconditionally; with specs unset (tests,
+CPU training) they are identity.
+"""
+
+from __future__ import annotations
+
+import jax
+
+_SPECS = {"act": None, "channels": None, "heads": None}
+
+
+def set_specs(act=None, channels=None, heads=None) -> None:
+    _SPECS["act"] = act
+    _SPECS["channels"] = channels
+    _SPECS["heads"] = heads
+
+
+def clear() -> None:
+    set_specs(None, None, None)
+
+
+def _apply(kind, x):
+    sp = _SPECS[kind]
+    if sp is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sp)
+
+
+def constrain_act(x):
+    return _apply("act", x)
+
+
+def constrain_channels(x):
+    return _apply("channels", x)
+
+
+def constrain_heads(x):
+    return _apply("heads", x)

@@ -1,0 +1,580 @@
+"""Model assembler: builds every assigned architecture family from a
+
+ModelConfig. Pure-JAX pytree params; homogeneous layer stacks are
+stacked on a leading axis and driven with lax.scan so compile time is
+depth-independent (essential for the 512-device dry-runs of 48-62 layer
+models).
+
+Families:
+  dense / vlm / audio — pre-norm attention + gated-MLP blocks; vlm/audio
+      prepend stub frontend embeddings (vlm prefix attends bidirectionally).
+  moe    — attention + top-k MoE blocks (aux load-balance loss threaded
+      through the scan carry).
+  ssm    — Mamba2 (SSD) blocks.
+  hybrid — Mamba2 backbone + ONE shared attention/MLP block applied every
+      `attn_every` layers (zamba2); shared weights, per-application KV
+      caches at decode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn_mod
+from repro.models import mamba2
+from repro.models import moe as moe_mod
+from repro.models.attention import attn_init, attention, init_kv_cache
+from repro.models.config import ModelConfig
+from repro.models.layers import (Params, cross_entropy, embed, embed_init,
+                                 mlp, mlp_init, rmsnorm, rmsnorm_init,
+                                 unembed)
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# optional activation-sharding constraints (set by the launch layer;
+# GSPMD needs anchors on the scan carry or it propagates weight
+# shardings into activations — see launch/sharding.py)
+# ---------------------------------------------------------------------------
+
+from repro.models import shard_ctx
+
+
+def set_activation_sharding(spec) -> None:
+    """Back-compat shim: sets only the block-boundary act spec."""
+    shard_ctx.set_specs(act=spec)
+
+
+def _constrain(x):
+    return shard_ctx.constrain_act(x)
+
+
+def layer_windows(cfg: ModelConfig) -> np.ndarray:
+    """Per-layer attention window (0 = full/global)."""
+    if cfg.global_every:
+        # gemma3 pattern: one global layer every `global_every` layers.
+        return np.array([0 if (i + 1) % cfg.global_every == 0
+                         else cfg.sliding_window
+                         for i in range(cfg.num_layers)], np.int32)
+    return np.full((cfg.num_layers,), cfg.sliding_window, np.int32)
+
+
+def num_shared_attn_apps(cfg: ModelConfig) -> int:
+    """Hybrid: how many times the shared attention block is applied."""
+    if cfg.family != "hybrid":
+        return 0
+    return cfg.num_layers // cfg.attn_every
+
+
+def kv_group_spec(cfg: ModelConfig, max_seq: int):
+    """Decode KV caches grouped by cache length.
+
+    Local (sliding-window) layers only need window-sized ring buffers;
+    global layers need the full sequence. Returns a list of
+    (layer_indices, cache_len, window) with at most two groups — this is
+    what makes gemma3 long_500k decode memory-feasible.
+    """
+    wins = layer_windows(cfg)
+    cache_len = [max_seq if w == 0 else min(int(w), max_seq) for w in wins]
+    groups = []
+    for ln in sorted(set(cache_len)):
+        idx = tuple(i for i, cl in enumerate(cache_len) if cl == ln)
+        groups.append((idx, ln, int(wins[idx[0]])))
+    return groups
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg: ModelConfig):
+    """One layer's params for the scanned stack."""
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 2)
+    if cfg.family in ("dense", "vlm", "audio"):
+        return {
+            "ln1": rmsnorm_init(cfg.d_model),
+            "attn": attn_init(ks[0], cfg, dt),
+            "ln2": rmsnorm_init(cfg.d_model),
+            "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, dt),
+        }
+    if cfg.family == "moe":
+        return {
+            "ln1": rmsnorm_init(cfg.d_model),
+            "attn": attn_init(ks[0], cfg, dt),
+            "ln2": rmsnorm_init(cfg.d_model),
+            "moe": moe_mod.moe_init(ks[1], cfg, dt),
+        }
+    if cfg.family in ("ssm", "hybrid"):
+        return {
+            "ln": rmsnorm_init(cfg.d_model),
+            "mamba": mamba2.mamba_init(ks[0], cfg, dt),
+        }
+    raise ValueError(cfg.family)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    cfg.validate()
+    dt = _dtype(cfg)
+    k_emb, k_blocks, k_shared = jax.random.split(key, 3)
+    block_keys = jax.random.split(k_blocks, cfg.num_layers)
+    blocks = jax.vmap(lambda k: _init_block(k, cfg))(block_keys)
+    params = {
+        "embed": embed_init(k_emb, cfg.vocab_size, cfg.d_model, dt,
+                            cfg.tie_embeddings),
+        "blocks": blocks,
+        "ln_f": rmsnorm_init(cfg.d_model),
+    }
+    if cfg.family == "hybrid":
+        ks = jax.random.split(k_shared, 2)
+        params["shared_attn"] = {
+            "ln1": rmsnorm_init(cfg.d_model),
+            "attn": attn_init(ks[0], cfg, dt),
+            "ln2": rmsnorm_init(cfg.d_model),
+            "mlp": mlp_init(ks[1], cfg.d_model, cfg.d_ff, dt),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _attn_mlp_block(bp: Params, cfg: ModelConfig, x, *, window, prefix, impl):
+    h = x + attention(bp["attn"], cfg, rmsnorm(bp["ln1"], x, cfg.norm_eps),
+                      window=window, prefix=prefix, impl=impl)
+    h = h + mlp(bp["mlp"], rmsnorm(bp["ln2"], h, cfg.norm_eps), cfg.mlp_act)
+    return h
+
+
+def _attn_moe_block(bp: Params, cfg: ModelConfig, x, *, impl, moe_impl):
+    h = x + attention(bp["attn"], cfg, rmsnorm(bp["ln1"], x, cfg.norm_eps),
+                      window=cfg.sliding_window, impl=impl)
+    y, aux = moe_mod.moe(bp["moe"], cfg, rmsnorm(bp["ln2"], h, cfg.norm_eps),
+                         impl=moe_impl)
+    return h + y, aux
+
+
+def _mamba_block(bp: Params, cfg: ModelConfig, x, *, impl):
+    return x + mamba2.mamba_forward(
+        bp["mamba"], cfg, rmsnorm(bp["ln"], x, cfg.norm_eps), impl=impl)
+
+
+def _dyn_window_block(bp, cfg, h, win, prefix, impl):
+    """Attention block with a TRACED per-layer window (gemma3's mixed
+
+    local/global stack inside one scanned body): the mask is built with
+    jnp.where so one body serves both layer kinds."""
+    s = h.shape[1]
+    xn = rmsnorm(bp["ln1"], h, cfg.norm_eps)
+    q, k, v = attn_mod._project_qkv(bp["attn"], cfg, xn)
+    pos = jnp.arange(s)[None, :]
+    q = attn_mod.apply_rope(q, pos, cfg.rope_theta)
+    k = attn_mod.apply_rope(k, pos, cfg.rope_theta)
+    if impl == "chunked":
+        out = attn_mod.chunked_attention(q, k, v, window=win, prefix=prefix)
+    else:
+        i = jnp.arange(s)[:, None]
+        j = jnp.arange(s)[None, :]
+        ok = j <= i
+        ok &= jnp.where(win > 0, (i - j) < win, True)
+        if prefix > 0:
+            ok |= (i < prefix) & (j < prefix)
+        mask = jnp.where(ok, 0.0, attn_mod.NEG_INF).astype(jnp.float32)
+        out = attn_mod.reference_attention(q, k, v, mask)
+    h = h + out.reshape(h.shape[0], s, cfg.q_dim) @ bp["attn"]["wo"]
+    h = h + mlp(bp["mlp"], rmsnorm(bp["ln2"], h, cfg.norm_eps), cfg.mlp_act)
+    return h
+
+
+def _hybrid_forward(params, cfg, x, *, impl, remat):
+    """Mamba2 backbone; the shared attention block fires every attn_every
+
+    layers (weights shared across applications)."""
+    k = cfg.attn_every
+    n_apps = num_shared_attn_apps(cfg)
+
+    def seg_body(h, bp):
+        return _constrain(_mamba_block(bp, cfg, h, impl=impl)), None
+
+    fn = jax.checkpoint(seg_body) if remat else seg_body
+    blocks = params["blocks"]
+    done = 0
+    for _ in range(n_apps):
+        seg = jax.tree.map(lambda a: a[done:done + k], blocks)
+        x, _ = jax.lax.scan(fn, x, seg)
+        done += k
+        x = _attn_mlp_block(params["shared_attn"], cfg, x,
+                            window=cfg.sliding_window, prefix=0, impl=impl)
+    if done < cfg.num_layers:
+        seg = jax.tree.map(lambda a: a[done:], blocks)
+        x, _ = jax.lax.scan(fn, x, seg)
+    return x
+
+
+def forward_hidden(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
+                   prefix_embeds: jax.Array | None = None,
+                   impl: str = "reference", moe_impl: str = "gather",
+                   remat: bool = False):
+    """Backbone only: tokens -> (final hidden (B,S,D) pre-unembed, aux)."""
+    return _backbone(params, cfg, tokens, prefix_embeds=prefix_embeds,
+                     impl=impl, moe_impl=moe_impl, remat=remat)
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
+            prefix_embeds: jax.Array | None = None,
+            impl: str = "reference", moe_impl: str = "gather",
+            remat: bool = False, last_only: bool = False):
+    """tokens (B,S) [+ prefix (B,P,D)] -> (logits, aux_loss).
+
+    last_only=True unembeds just the final position (serving prefill) —
+    avoids materializing the (B, S, V) logits tensor."""
+    x, aux_total = _backbone(params, cfg, tokens,
+                             prefix_embeds=prefix_embeds, impl=impl,
+                             moe_impl=moe_impl, remat=remat)
+    if last_only:
+        x = x[:, -1:, :]
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x)
+    return logits, aux_total
+
+
+def _backbone(params: Params, cfg: ModelConfig, tokens: jax.Array, *,
+              prefix_embeds: jax.Array | None = None,
+              impl: str = "reference", moe_impl: str = "gather",
+              remat: bool = False):
+    x = _constrain(embed(params["embed"], tokens))
+    prefix = 0
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+        prefix = prefix_embeds.shape[1] if cfg.family == "vlm" else 0
+
+    aux_total = jnp.zeros((), jnp.float32)
+    wins = layer_windows(cfg)
+
+    if cfg.family in ("dense", "vlm", "audio"):
+        if (wins == wins[0]).all():
+            w0 = int(wins[0])
+
+            def body(h, bp):
+                return _constrain(
+                    _attn_mlp_block(bp, cfg, h, window=w0, prefix=prefix,
+                                    impl=impl)), None
+
+            fn = jax.checkpoint(body) if remat else body
+            x, _ = jax.lax.scan(fn, x, params["blocks"])
+        else:
+            def body(h, xs):
+                bp, win = xs
+                return _constrain(
+                    _dyn_window_block(bp, cfg, h, win, prefix, impl)), None
+
+            fn = jax.checkpoint(body) if remat else body
+            x, _ = jax.lax.scan(fn, x, (params["blocks"], jnp.asarray(wins)))
+
+    elif cfg.family == "moe":
+        def body(carry, bp):
+            h, aux = carry
+            h, a = _attn_moe_block(bp, cfg, h, impl=impl, moe_impl=moe_impl)
+            return (_constrain(h), aux + a), None
+
+        fn = jax.checkpoint(body) if remat else body
+        (x, aux_total), _ = jax.lax.scan(fn, (x, aux_total), params["blocks"])
+
+    elif cfg.family == "ssm":
+        def body(h, bp):
+            return _constrain(_mamba_block(bp, cfg, h, impl=impl)), None
+
+        fn = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(fn, x, params["blocks"])
+
+    elif cfg.family == "hybrid":
+        x = _hybrid_forward(params, cfg, x, impl=impl, remat=remat)
+
+    else:
+        raise ValueError(cfg.family)
+
+    return x, aux_total
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def streamed_cross_entropy(params: Params, cfg: ModelConfig, x: jax.Array,
+                           labels: jax.Array, block: int = 256) -> jax.Array:
+    """Blockwise unembed + softmax CE: never materializes (B,S,V).
+
+    x is the PRE-ln_f hidden; labels (B,S). Large-vocab training
+    (qwen 152k, gemma3 262k) would otherwise spend tens of GB on f32
+    logits."""
+    b, s, d = x.shape
+    block = min(block, s)
+    pad = (-s) % block
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+    nb = (s + pad) // block
+    xb = jnp.moveaxis(x.reshape(b, nb, block, d), 1, 0)
+    lb = jnp.moveaxis(labels.reshape(b, nb, block), 1, 0)
+    valid = jnp.moveaxis(
+        (jnp.arange(s + pad) < s).reshape(nb, block)[None].repeat(b, 0)
+        .reshape(b, nb, block), 1, 0)
+
+    @jax.checkpoint
+    def step(acc, inp):
+        # checkpointed: the backward recomputes each block's logits
+        # instead of saving (B, block, V) f32 residuals per block
+        xc, lc, vc = inp
+        h = rmsnorm(params["ln_f"], xc, cfg.norm_eps)
+        logits = unembed(params["embed"], h).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        nll = jnp.where(vc, logz - ll, 0.0)
+        return acc + jnp.sum(nll), None
+
+    total, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32), (xb, lb, valid))
+    return total / (b * s)
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: dict, *,
+            impl: str = "reference", moe_impl: str = "gather",
+            remat: bool = False, ce_block: int | None = None):
+    """batch: {tokens (B,S), labels (B,S), [prefix_embeds (B,P,D)]}.
+
+    ce_block: if set, use the streamed CE (launch-scale steps)."""
+    prefix_embeds = batch.get("prefix_embeds")
+    if ce_block:
+        x, aux = forward_hidden(params, cfg, batch["tokens"],
+                                prefix_embeds=prefix_embeds, impl=impl,
+                                moe_impl=moe_impl, remat=remat)
+        if prefix_embeds is not None:
+            x = x[:, prefix_embeds.shape[1]:]
+        ce = streamed_cross_entropy(params, cfg, x, batch["labels"],
+                                    block=ce_block)
+        return ce + cfg.router_aux_coef * aux, {"ce": ce, "aux": aux}
+    logits, aux = forward(params, cfg, batch["tokens"],
+                          prefix_embeds=prefix_embeds, impl=impl,
+                          moe_impl=moe_impl, remat=remat)
+    if prefix_embeds is not None:
+        logits = logits[:, prefix_embeds.shape[1]:]
+    ce = cross_entropy(logits, batch["labels"], batch.get("mask"))
+    return ce + cfg.router_aux_coef * aux, {"ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DecodeState:
+    """Decode caches (arrays only) + position counter.
+
+    caches layout by family:
+      dense/vlm/audio/moe: {"kv": [ {"k","v"} per kv-group ]}
+      ssm:                 {"ssm": {"ssm","conv"}}
+      hybrid:              {"ssm": ..., "shared_kv": {"k","v"}}
+    Static group metadata comes from kv_group_spec(cfg, max_seq).
+    """
+
+    caches: Params
+    position: jax.Array
+
+    def tree_flatten(self):
+        return (self.caches, self.position), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int,
+                      dtype=jnp.bfloat16) -> DecodeState:
+    caches: Params = {}
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        caches["kv"] = [
+            init_kv_cache(cfg, batch, clen, dtype, layers=len(idx))
+            for idx, clen, _ in kv_group_spec(cfg, max_seq)
+        ]
+    if cfg.family in ("ssm", "hybrid"):
+        caches["ssm"] = mamba2.init_ssm_cache(cfg, batch)
+    if cfg.family == "hybrid":
+        n_apps = num_shared_attn_apps(cfg)
+        clen = max_seq if cfg.sliding_window == 0 else min(
+            cfg.sliding_window, max_seq)
+        caches["shared_kv"] = init_kv_cache(cfg, batch, clen, dtype,
+                                            layers=n_apps)
+    return DecodeState(caches=caches, position=jnp.zeros((), jnp.int32))
+
+
+def _decode_attn(bp, cfg, x, k_cache, v_cache, pos, cache_len: int,
+                 impl: str = "reference"):
+    """One-token GQA attention against a (ring-buffer) KV cache.
+
+    Window masking is realized by the ring overwrite itself: a cache of
+    length min(window, max_seq) holds exactly the last `cache_len` keys.
+    impl="pallas" routes through the flash-decode kernel
+    (repro/kernels/decode_attention) — the TPU serving hot path; the
+    ring-buffer validity mask maps onto the kernel's `lengths` operand.
+    """
+    b = x.shape[0]
+    q, k, v = attn_mod._project_qkv(bp["attn"], cfg, x)
+    # pos is per-slot (B,): continuous batching decodes slots at
+    # different sequence positions in the same step.
+    posb = pos[:, None].astype(jnp.int32)  # (B, 1)
+    q = attn_mod.apply_rope(q, posb, cfg.rope_theta)
+    k = attn_mod.apply_rope(k, posb, cfg.rope_theta)
+    wpos = jnp.mod(pos, cache_len)  # (B,)
+    rows = jnp.arange(b)
+    k_cache = k_cache.at[rows, wpos].set(k[:, 0])
+    v_cache = v_cache.at[rows, wpos].set(v[:, 0])
+
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    lengths = jnp.minimum(pos + 1, cache_len).astype(jnp.int32)  # (B,)
+    if impl == "pallas":
+        from repro.kernels.decode_attention import ops as da_ops
+        out = da_ops.decode_attention(
+            q[:, 0], jnp.swapaxes(k_cache, 1, 2),
+            jnp.swapaxes(v_cache, 1, 2), lengths)[:, None]
+    else:
+        group = hq // hkv
+        qg = q.reshape(b, hkv, group, cfg.head_dim)
+        scores = jnp.einsum("bhgd,bkhd->bhgk", qg,
+                            k_cache) / np.sqrt(cfg.head_dim)
+        scores = scores.astype(jnp.float32)
+        j = jnp.arange(cache_len)
+        ok = j[None, :] < lengths[:, None]  # (B, S)
+        scores = jnp.where(ok[:, None, None, :], scores, attn_mod.NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
+        out = jnp.einsum("bhgk,bkhd->bhgd", probs, v_cache)
+    return out.reshape(b, 1, cfg.q_dim) @ bp["attn"]["wo"], k_cache, v_cache
+
+
+def _decode_attn_ffn_block(bp, cfg, x, k_cache, v_cache, pos, cache_len,
+                           moe_impl, impl="reference"):
+    xn = rmsnorm(bp["ln1"], x, cfg.norm_eps)
+    y, k_cache, v_cache = _decode_attn(bp, cfg, xn, k_cache, v_cache, pos,
+                                       cache_len, impl=impl)
+    h = x + y
+    if "moe" in bp:
+        y2, _ = moe_mod.moe(bp["moe"], cfg,
+                            rmsnorm(bp["ln2"], h, cfg.norm_eps),
+                            impl=moe_impl)
+    else:
+        y2 = mlp(bp["mlp"], rmsnorm(bp["ln2"], h, cfg.norm_eps), cfg.mlp_act)
+    return h + y2, k_cache, v_cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                state: DecodeState, *, moe_impl: str = "gather",
+                impl: str = "reference"):
+    """tokens (B,1) -> (logits (B,1,V), new state). impl="pallas" uses
+    the flash-decode kernel for the attention-vs-cache step.
+
+    `state.position` may be a scalar (synchronized batch decode) or a
+    (B,) vector (continuous batching: per-slot positions)."""
+    x = embed(params["embed"], tokens)
+    b = tokens.shape[0]
+    pos = jnp.broadcast_to(jnp.atleast_1d(state.position), (b,))
+    caches = dict(state.caches)
+
+    if cfg.family in ("dense", "vlm", "audio", "moe"):
+        # Recover max_seq from the largest cache: the window==0 group (if
+        # any) holds the full sequence; for all-local stacks every cache
+        # length is min(window, max_seq) and the spec is length-stable.
+        max_len = max(g["k"].shape[2] for g in caches["kv"])
+        groups = kv_group_spec(cfg, max_len)
+        new_kv = []
+        for gi, (idx, clen, _win) in enumerate(groups):
+            bsel = jax.tree.map(lambda a: a[np.asarray(idx)], params["blocks"])
+            kc, vc = caches["kv"][gi]["k"], caches["kv"][gi]["v"]
+
+            def body(h, xs):
+                bp, kcl, vcl = xs
+                h2, nk, nv = _decode_attn_ffn_block(bp, cfg, h, kcl, vcl,
+                                                    pos, clen, moe_impl,
+                                                    impl=impl)
+                return h2, (nk, nv)
+
+            x, (nk, nv) = jax.lax.scan(body, x, (bsel, kc, vc))
+            new_kv.append({"k": nk, "v": nv})
+        caches["kv"] = new_kv
+
+    elif cfg.family == "ssm":
+        def body(h, xs):
+            bp, ssm_s, conv_s = xs
+            xn = rmsnorm(bp["ln"], h, cfg.norm_eps)
+            y, ssm_s, conv_s = mamba2.mamba_decode(bp["mamba"], cfg, xn,
+                                                   ssm_s, conv_s)
+            return h + y, (ssm_s, conv_s)
+
+        x, (ssm_new, conv_new) = jax.lax.scan(
+            body, x, (params["blocks"], caches["ssm"]["ssm"],
+                      caches["ssm"]["conv"]))
+        caches["ssm"] = {"ssm": ssm_new, "conv": conv_new}
+
+    elif cfg.family == "hybrid":
+        x, caches = _hybrid_decode(params, cfg, x, caches, pos, moe_impl,
+                                   impl=impl)
+
+    else:
+        raise ValueError(cfg.family)
+
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = unembed(params["embed"], x)
+    new_pos = state.position + 1  # preserves scalar/vector shape
+    return logits, DecodeState(caches=caches, position=new_pos)
+
+
+def _hybrid_decode(params, cfg, x, caches, pos, moe_impl,
+                   impl="reference"):
+    k = cfg.attn_every
+    n_apps = num_shared_attn_apps(cfg)
+    ssm_all, conv_all = caches["ssm"]["ssm"], caches["ssm"]["conv"]
+    kc, vc = caches["shared_kv"]["k"], caches["shared_kv"]["v"]
+    clen = kc.shape[2]
+
+    def seg_body(h, xs):
+        bp, ssm_s, conv_s = xs
+        xn = rmsnorm(bp["ln"], h, cfg.norm_eps)
+        y, ssm_s, conv_s = mamba2.mamba_decode(bp["mamba"], cfg, xn,
+                                               ssm_s, conv_s)
+        return h + y, (ssm_s, conv_s)
+
+    new_ssm, new_conv, new_k, new_v = [], [], [], []
+    done = 0
+    for app in range(n_apps):
+        seg = jax.tree.map(lambda a: a[done:done + k], params["blocks"])
+        x, (s_new, c_new) = jax.lax.scan(
+            seg_body, x, (seg, ssm_all[done:done + k], conv_all[done:done + k]))
+        new_ssm.append(s_new)
+        new_conv.append(c_new)
+        x, nk, nv = _decode_attn_ffn_block(
+            params["shared_attn"], cfg, x, kc[app], vc[app], pos, clen,
+            moe_impl, impl=impl)
+        new_k.append(nk)
+        new_v.append(nv)
+        done += k
+    if done < cfg.num_layers:
+        seg = jax.tree.map(lambda a: a[done:], params["blocks"])
+        x, (s_new, c_new) = jax.lax.scan(
+            seg_body, x, (seg, ssm_all[done:], conv_all[done:]))
+        new_ssm.append(s_new)
+        new_conv.append(c_new)
+    caches = dict(caches)
+    caches["ssm"] = {"ssm": jnp.concatenate(new_ssm, axis=0),
+                     "conv": jnp.concatenate(new_conv, axis=0)}
+    caches["shared_kv"] = {"k": jnp.stack(new_k), "v": jnp.stack(new_v)}
+    return x, caches

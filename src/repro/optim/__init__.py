@@ -1,0 +1,14 @@
+"""Optimizers (pure-JAX, optax is not available offline).
+
+Each optimizer is an (init, update) pair over pytrees:
+    state = opt.init(params)
+    new_params, new_state = opt.update(params, grads, state)
+All optimizers support an optional per-call learning-rate override so
+the FL trainer can implement the paper's decaying alpha_k.
+"""
+
+from repro.optim.optimizers import (Optimizer, adamw, clip_by_global_norm,
+                                    cosine_schedule, sgd)
+
+__all__ = ["Optimizer", "sgd", "adamw", "cosine_schedule",
+           "clip_by_global_norm"]

@@ -1,0 +1,234 @@
+"""FL substrate tests: DPASGD round step invariants, trainer end-to-end,
+
+optimizers, checkpointing, data pipeline, and the multi-device gossip
+backends (subprocess: the main pytest process keeps 1 device)."""
+
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.delay import FEMNIST
+from repro.data.synthetic import make_federated_dataset, make_lm_dataset
+from repro.fl import dpasgd
+from repro.fl.trainer import FLConfig, run_fl
+from repro.models.small import SMALL_MODELS
+from repro.networks.zoo import get_network
+from repro.optim import adamw, clip_by_global_norm, cosine_schedule, sgd
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# round plans
+# ---------------------------------------------------------------------------
+
+
+def test_multigraph_plan_consistency():
+    net = get_network("gaia")
+    plan, states, overlay = dpasgd.multigraph_plan(net, FEMNIST, t=5)
+    assert plan.strong.shape[0] == len(states)
+    # round 0 = overlay: every directed edge strong
+    assert plan.strong[0].all()
+    # coefficients + diag sum to 1 per silo (mean-preserving when fresh)
+    n = net.num_silos
+    for k in (0, 1):
+        row_sum = np.zeros(n)
+        for e in range(len(plan.src)):
+            row_sum[plan.dst[e]] += plan.coeffs[k, e]
+        np.testing.assert_allclose(row_sum + plan.diag[k], 1.0, rtol=1e-6)
+
+
+def test_static_plan_round_trip():
+    from repro.core.topology import ring_topology
+    net = get_network("gaia")
+    g = ring_topology(net, FEMNIST).graph
+    plan = dpasgd.static_plan(g)
+    assert plan.strong.all()
+    n = net.num_silos
+    row_sum = np.zeros(n)
+    for e in range(len(plan.src)):
+        row_sum[plan.dst[e]] += plan.coeffs[0, e]
+    np.testing.assert_allclose(row_sum + plan.diag[0], 1.0, rtol=1e-6)
+
+
+def test_gossip_only_preserves_mean_and_contracts():
+    """With lr=0 (pure gossip) a static plan preserves the global mean
+
+    and contracts the silo spread (consensus)."""
+    from repro.core.topology import ring_topology
+    net = get_network("gaia")
+    g = ring_topology(net, FEMNIST).graph
+    plan = dpasgd.static_plan(g)
+    n = net.num_silos
+
+    spec = SMALL_MODELS["femnist_cnn"]
+    opt = sgd(0.0)
+    state = dpasgd.init_fl_state(spec.init, opt, n, plan.src, KEY)
+    # perturb silos so there is spread to contract
+    noise = jax.tree.map(
+        lambda w: w + 0.1 * jax.random.normal(KEY, w.shape, w.dtype),
+        state.silo_params)
+    state = dpasgd.FLSimState(noise,
+                              state.opt_state,
+                              jax.tree.map(lambda w: w[plan.src], noise))
+
+    batch = {"x": jnp.zeros((1, n, 2, 28, 28, 1)),
+             "y": jnp.zeros((1, n, 2), jnp.int32)}
+    mean0 = jax.tree.map(lambda w: w.mean(axis=0), state.silo_params)
+    spread0 = sum(float(jnp.var(w, axis=0).sum())
+                  for w in jax.tree.leaves(state.silo_params))
+    for _ in range(5):
+        state, _ = dpasgd.fl_round_step(
+            state, batch, plan.src, plan.dst,
+            jnp.asarray(plan.strong[0]), jnp.asarray(plan.coeffs[0]),
+            jnp.asarray(plan.diag[0]), loss_fn=lambda p, b: spec.loss(p, b),
+            opt=opt, local_updates=1)
+    mean1 = jax.tree.map(lambda w: w.mean(axis=0), state.silo_params)
+    spread1 = sum(float(jnp.var(w, axis=0).sum())
+                  for w in jax.tree.leaves(state.silo_params))
+    for a, b in zip(jax.tree.leaves(mean0), jax.tree.leaves(mean1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+    assert spread1 < 0.2 * spread0, (spread0, spread1)
+
+
+# ---------------------------------------------------------------------------
+# trainer end-to-end (tiny)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("topology", ["multigraph", "ring", "star"])
+def test_trainer_learns(topology):
+    cfg = FLConfig(dataset="femnist", network="gaia", topology=topology,
+                   rounds=20, eval_every=20, samples_per_silo=64,
+                   batch_size=16, lr=0.05, seed=1)
+    res = run_fl(cfg)
+    assert res.round_losses[-1] < res.round_losses[0]
+    assert res.final_acc() > 1.0 / 62 * 3  # >> chance
+    assert len(res.cycle_times_ms) == 20
+    assert res.mean_cycle_ms > 0
+
+
+def test_trainer_multigraph_faster_clock_than_ring():
+    k = dict(dataset="femnist", network="gaia", rounds=10, eval_every=10,
+             samples_per_silo=32, batch_size=8, seed=0)
+    ours = run_fl(FLConfig(topology="multigraph", **k))
+    ring = run_fl(FLConfig(topology="ring", **k))
+    assert ours.mean_cycle_ms < ring.mean_cycle_ms
+
+
+def test_removed_network_ablation_setup():
+    from repro.fl.trainer import _removed_network
+    net = get_network("gaia")
+    red, keep = _removed_network(net, FEMNIST, 3, "inefficient", 0)
+    assert red.num_silos == net.num_silos - 3
+    assert len(keep) == red.num_silos
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+
+def test_sgd_momentum_and_adamw_descend():
+    def quad(p):
+        return jnp.sum((p["w"] - 3.0) ** 2)
+
+    for opt in (sgd(0.1, momentum=0.9), adamw(0.1)):
+        params = {"w": jnp.zeros((4,))}
+        state = opt.init(params)
+        loss0 = float(quad(params))
+        for _ in range(50):
+            g = jax.grad(quad)(params)
+            params, state = opt.update(params, g, state)
+        assert float(quad(params)) < 1e-2 * loss0
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1.0, 100, warmup=10)
+    assert float(lr(0)) == 0.0
+    assert float(lr(10)) == pytest.approx(1.0)
+    assert float(lr(100)) == pytest.approx(0.0, abs=1e-6)
+    assert float(lr(55)) < float(lr(10))
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    cn = jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(clipped)))
+    assert float(cn) == pytest.approx(1.0, rel=1e-5)
+    assert float(norm) == pytest.approx(np.sqrt(1000.0), rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_round_trip(tmp_path):
+    from repro.checkpoint import CheckpointManager, restore_pytree, save_pytree
+    tree = {"params": {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                       "b": jnp.ones((3,), jnp.bfloat16)},
+            "step": 7, "nested": [1.5, "name", None, (2, 3)]}
+    path = tmp_path / "ck.msgpack"
+    save_pytree(path, tree)
+    back = restore_pytree(path)
+    np.testing.assert_array_equal(np.asarray(back["params"]["w"]),
+                                  np.arange(6, dtype=np.float32).reshape(2, 3))
+    assert back["params"]["b"].dtype == np.dtype("bfloat16") or \
+        str(back["params"]["b"].dtype) == "bfloat16"
+    assert back["step"] == 7
+    assert back["nested"] == [1.5, "name", None, (2, 3)]
+
+    mgr = CheckpointManager(tmp_path / "run", keep=2)
+    for s in (1, 2, 3):
+        mgr.save(s, {"v": jnp.full((2,), float(s))})
+    step, got = mgr.restore()
+    assert step == 3 and float(got["v"][0]) == 3.0
+    assert not mgr.path(1).exists()  # retention
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+
+def test_federated_dataset_partitions():
+    ds = make_federated_dataset("femnist", 8, samples_per_silo=64, alpha=0.3)
+    assert ds.num_silos == 8
+    assert all(len(x) > 0 for x in ds.silo_x)
+    # non-IID: per-silo label distributions differ materially
+    hists = np.stack([np.bincount(y, minlength=62) / max(len(y), 1)
+                      for y in ds.silo_y])
+    tv = 0.5 * np.abs(hists[:, None] - hists[None, :]).sum(-1)
+    assert tv[np.triu_indices(8, 1)].mean() > 0.2
+
+
+def test_lm_dataset_shapes():
+    silos = make_lm_dataset(512, 32, 4, samples_per_silo=8)
+    assert len(silos) == 4
+    for s in silos:
+        assert s.shape == (8, 33)
+        assert s.min() >= 0 and s.max() < 512
+
+
+# ---------------------------------------------------------------------------
+# multi-device gossip backends (subprocess)
+# ---------------------------------------------------------------------------
+
+
+def test_gossip_backends_multidevice():
+    script = pathlib.Path(__file__).parent / "mp_scripts" / "gossip_check.py"
+    src = pathlib.Path(__file__).parent.parent / "src"
+    r = subprocess.run([sys.executable, str(script)], capture_output=True,
+                       text=True, timeout=480,
+                       env={"PYTHONPATH": str(src), "PATH": "/usr/bin:/bin"})
+    assert r.returncode == 0, r.stdout + r.stderr
+    for marker in ("dense-ok", "ring-strong-ok", "ring-buffers-ok",
+                   "ring-weak-ok", "hlo-ok"):
+        assert marker in r.stdout, r.stdout

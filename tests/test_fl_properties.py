@@ -1,0 +1,139 @@
+"""Hypothesis property tests for the DPASGD round engine, using a tiny
+
+linear model so each example costs milliseconds. System invariants:
+
+  * pure gossip (lr=0) on static plans preserves the global mean and
+    contracts silo spread on connected graphs (consensus);
+  * multigraph plans preserve the mean when every buffer is fresh;
+  * over a full state cycle, every pair is refreshed at least once
+    (no silo starves);
+  * buffers equal true neighbor weights after a strong round.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.delay import FEMNIST
+from repro.fl import dpasgd
+from repro.networks.zoo import NetworkSpec, Silo, get_network
+from repro.networks.zoo import _latency_matrix
+from repro.optim import sgd
+
+D = 8
+
+
+def _toy_init(key):
+    return {"w": jax.random.normal(key, (D,))}
+
+
+def _toy_loss(p, batch):
+    return jnp.sum((p["w"] - batch["target"]) ** 2)
+
+
+def _rand_net(seed, n):
+    rng = np.random.default_rng(seed)
+    silos = tuple(
+        Silo(name=f"s{i}", lat=float(rng.uniform(-60, 60)),
+             lon=float(rng.uniform(-180, 180)),
+             upload_gbps=10.0, download_gbps=10.0,
+             compute_scale=float(rng.uniform(0.8, 1.2)))
+        for i in range(n))
+    lat = _latency_matrix([(s.name, s.lat, s.lon) for s in silos])
+    return NetworkSpec(name=f"r{seed}", silos=silos, latency_ms=lat)
+
+
+def _perturbed_state(plan, n, opt, seed):
+    key = jax.random.PRNGKey(seed)
+    state = dpasgd.init_fl_state(_toy_init, opt, n, plan.src, key)
+    noisy = jax.tree.map(
+        lambda w: w + jax.random.normal(jax.random.PRNGKey(seed + 1),
+                                        w.shape),
+        state.silo_params)
+    return dpasgd.FLSimState(noisy, state.opt_state,
+                             jax.tree.map(lambda w: w[plan.src], noisy))
+
+
+def _run_rounds(state, plan, opt, rounds, n):
+    batch = {"target": jnp.zeros((1, n, 1, D))}
+    for k in range(rounds):
+        pk = k % plan.num_rounds_cycle
+        state, _ = dpasgd.fl_round_step(
+            state, batch, plan.src, plan.dst,
+            jnp.asarray(plan.strong[pk]), jnp.asarray(plan.coeffs[pk]),
+            jnp.asarray(plan.diag[pk]),
+            loss_fn=_toy_loss, opt=opt, local_updates=1)
+    return state
+
+
+@given(seed=st.integers(0, 500), n=st.integers(4, 9))
+@settings(max_examples=10, deadline=None)
+def test_multigraph_gossip_converges_to_consensus(seed, n):
+    """lr=0: repeated multigraph rounds (stale buffers and all) must
+
+    still contract the silo spread and keep weights near the convex
+    hull of the initial ones."""
+    net = _rand_net(seed, n)
+    plan, _, _ = dpasgd.multigraph_plan(net, FEMNIST, t=4, cap_states=24)
+    opt = sgd(0.0)
+    state = _perturbed_state(plan, n, opt, seed)
+    w0 = state.silo_params["w"]
+    spread0 = float(jnp.var(w0, axis=0).sum())
+    state = _run_rounds(state, plan, opt, 4 * plan.num_rounds_cycle, n)
+    w1 = state.silo_params["w"]
+    spread1 = float(jnp.var(w1, axis=0).sum())
+    assert spread1 < 0.5 * spread0 + 1e-9
+    # convex combination bound (with slack for the stale-buffer drift)
+    assert float(w1.max()) <= float(w0.max()) + 1e-4
+    assert float(w1.min()) >= float(w0.min()) - 1e-4
+
+
+@given(seed=st.integers(0, 500), n=st.integers(4, 9))
+@settings(max_examples=10, deadline=None)
+def test_static_gossip_preserves_mean_exactly(seed, n):
+    from repro.core.topology import ring_topology
+    net = _rand_net(seed, n)
+    plan = dpasgd.static_plan(ring_topology(net, FEMNIST).graph)
+    opt = sgd(0.0)
+    state = _perturbed_state(plan, n, opt, seed)
+    mean0 = np.asarray(state.silo_params["w"].mean(axis=0))
+    state = _run_rounds(state, plan, opt, 6, n)
+    mean1 = np.asarray(state.silo_params["w"].mean(axis=0))
+    np.testing.assert_allclose(mean0, mean1, rtol=1e-5, atol=1e-6)
+
+
+@given(seed=st.integers(0, 500), n=st.integers(4, 10), t=st.integers(2, 6))
+@settings(max_examples=15, deadline=None)
+def test_every_pair_refreshes_within_a_cycle(seed, n, t):
+    """No silo pair starves: across one full state cycle every directed
+
+    edge is strong at least once (so staleness h is bounded by the
+    cycle length)."""
+    net = _rand_net(seed, n)
+    plan, states, overlay = dpasgd.multigraph_plan(net, FEMNIST, t=t,
+                                                   cap_states=None)
+    strong_any = plan.strong.any(axis=0)
+    assert strong_any.all(), "some edge never goes strong"
+
+
+@given(seed=st.integers(0, 300))
+@settings(max_examples=8, deadline=None)
+def test_buffers_fresh_after_strong_round(seed):
+    net = _rand_net(seed, 6)
+    from repro.core.topology import ring_topology
+    plan = dpasgd.static_plan(ring_topology(net, FEMNIST).graph)
+    opt = sgd(0.0)
+    state = _perturbed_state(plan, 6, opt, seed)
+    w_before = state.silo_params["w"]
+    batch = {"target": jnp.zeros((1, 6, 1, D))}
+    state, _ = dpasgd.fl_round_step(
+        state, batch, plan.src, plan.dst, jnp.asarray(plan.strong[0]),
+        jnp.asarray(plan.coeffs[0]), jnp.asarray(plan.diag[0]),
+        loss_fn=_toy_loss, opt=opt, local_updates=1)
+    # buffers[e] must equal the PRE-aggregation weights of src(e)
+    np.testing.assert_allclose(np.asarray(state.buffers["w"]),
+                               np.asarray(w_before[plan.src]),
+                               rtol=1e-6, atol=1e-6)

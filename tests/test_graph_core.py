@@ -1,0 +1,160 @@
+"""Unit + property tests for repro.core graph algorithms (the paper's
+
+Algorithm 1 / Algorithm 2 and their invariants)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import parsing
+from repro.core.delay import FEMNIST, Workload, graph_pair_delays
+from repro.core.graph import (STRONG, WEAK, MultigraphState, canon,
+                              make_graph)
+from repro.core.multigraph import build_multigraph
+from repro.core.topology import ring_topology
+from repro.networks.zoo import NetworkSpec, Silo, get_network
+
+# ---------------------------------------------------------------------------
+# helpers: random small networks for property tests
+# ---------------------------------------------------------------------------
+
+
+def _random_network(seed: int, n: int) -> NetworkSpec:
+    rng = np.random.default_rng(seed)
+    lats = rng.uniform(-60, 60, n)
+    lons = rng.uniform(-180, 180, n)
+    silos = tuple(
+        Silo(name=f"s{i}", lat=float(lats[i]), lon=float(lons[i]),
+             upload_gbps=float(rng.uniform(1, 10)),
+             download_gbps=float(rng.uniform(1, 10)),
+             compute_scale=float(rng.uniform(0.8, 1.2)))
+        for i in range(n))
+    # latency from coordinates via the zoo's own model
+    from repro.networks.zoo import _latency_matrix
+    lat = _latency_matrix([(s.name, s.lat, s.lon) for s in silos])
+    return NetworkSpec(name=f"rand{seed}", silos=silos, latency_ms=lat)
+
+
+# ---------------------------------------------------------------------------
+# graph basics
+# ---------------------------------------------------------------------------
+
+
+def test_canon_and_dedup():
+    g = make_graph(4, [(1, 0), (0, 1), (2, 3)])
+    assert g.pairs == ((0, 1), (2, 3))
+    assert list(g.degrees()) == [1, 1, 1, 1]
+
+
+def test_self_pair_rejected():
+    with pytest.raises(ValueError):
+        canon(2, 2)
+
+
+def test_connectivity_check():
+    assert make_graph(3, [(0, 1), (1, 2)]).is_connected()
+    assert not make_graph(4, [(0, 1), (2, 3)]).is_connected()
+
+
+def test_isolated_nodes_definition():
+    st_ = MultigraphState(num_nodes=4, edge_type={
+        (0, 1): STRONG, (1, 2): WEAK, (2, 3): WEAK})
+    # 2 and 3 touch only weak edges -> isolated; 0,1 touch a strong edge.
+    assert st_.isolated_nodes() == (2, 3)
+    assert st_.has_isolated()
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 invariants
+# ---------------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 2**16), n=st.integers(4, 12), t=st.integers(1, 8))
+@settings(max_examples=25, deadline=None)
+def test_algorithm1_multiplicities(seed, n, t):
+    net = _random_network(seed, n)
+    overlay = ring_topology(net, FEMNIST).graph
+    mg = build_multigraph(net, FEMNIST, overlay, t=t)
+    # Every overlay pair appears; multiplicity within [1, t].
+    assert set(mg.multiplicity) == set(overlay.pairs)
+    for p, m in mg.multiplicity.items():
+        assert 1 <= m <= t
+    # The min-delay pair always has multiplicity 1 (d/d_min rounds to 1).
+    delays = graph_pair_delays(net, FEMNIST, overlay)
+    pmin = min(delays, key=delays.get)
+    assert mg.multiplicity[pmin] == 1
+    # Monotone: larger delay never gets fewer edges.
+    ds = sorted(delays.items(), key=lambda kv: kv[1])
+    ms = [mg.multiplicity[p] for p, _ in ds]
+    assert all(a <= b for a, b in zip(ms, ms[1:]))
+
+
+def test_algorithm1_t1_is_overlay():
+    net = get_network("gaia")
+    overlay = ring_topology(net, FEMNIST).graph
+    mg = build_multigraph(net, FEMNIST, overlay, t=1)
+    assert all(m == 1 for m in mg.multiplicity.values())
+    states = parsing.parse_multigraph(mg)
+    # t=1 -> single state == overlay, no weak edges, no isolated nodes
+    # (paper Table 6: t=1 reduces to RING's overlay).
+    assert len(states) == 1
+    assert states[0].weak_pairs() == ()
+    assert not states[0].has_isolated()
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 invariants
+# ---------------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 2**16), n=st.integers(4, 10), t=st.integers(2, 6))
+@settings(max_examples=25, deadline=None)
+def test_algorithm2_parse_invariants(seed, n, t):
+    net = _random_network(seed, n)
+    overlay = ring_topology(net, FEMNIST).graph
+    mg = build_multigraph(net, FEMNIST, overlay, t=t)
+    s_max = parsing.max_states(mg)
+    lcm = 1
+    for m in mg.multiplicity.values():
+        lcm = math.lcm(lcm, m)
+    assert s_max == lcm
+
+    states = parsing.parse_multigraph(mg)
+    assert len(states) == s_max
+    # State 0 is the overlay: every pair strong (paper: "The first state
+    # is always the overlay").
+    assert states[0].strong_pairs() == tuple(sorted(mg.multiplicity))
+    # Every state covers every pair exactly once (simple graph states).
+    for s in states:
+        assert set(s.edge_type) == set(mg.multiplicity)
+    # Pair with multiplicity m is strong exactly every m-th state.
+    for p, m in mg.multiplicity.items():
+        pattern = [s.edge_type[p] for s in states]
+        for k, e in enumerate(pattern):
+            assert e == (STRONG if k % m == 0 else WEAK)
+    # Across one full cycle each pair is strong exactly s_max/m times.
+    for p, m in mg.multiplicity.items():
+        strong_count = sum(s.edge_type[p] == STRONG for s in states)
+        assert strong_count == s_max // m
+
+
+def test_parse_cap_states():
+    net = get_network("gaia")
+    overlay = ring_topology(net, FEMNIST).graph
+    mg = build_multigraph(net, FEMNIST, overlay, t=5)
+    states = parsing.parse_multigraph(mg, cap_states=7)
+    assert len(states) <= 7
+
+
+def test_state_schedule_cycles():
+    net = get_network("gaia")
+    overlay = ring_topology(net, FEMNIST).graph
+    mg = build_multigraph(net, FEMNIST, overlay, t=3)
+    states = parsing.parse_multigraph(mg)
+    seq = list(parsing.state_schedule(states, 2 * len(states) + 3))
+    assert seq[0][1] is states[0]
+    assert seq[len(states)][1] is states[0]
+    assert seq[len(states) + 1][1] is states[1]

@@ -1,0 +1,270 @@
+"""Per-kernel allclose tests: shape/dtype sweeps against ref.py oracles,
+
+interpret=True (kernel body executes on CPU), plus hypothesis property
+tests for the gossip combine."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.flash_attention import ops as fa_ops
+from repro.kernels.flash_attention.kernel import flash_attention as fa_kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.gossip_combine.kernel import gossip_combine
+from repro.kernels.gossip_combine.ref import gossip_combine_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    # f32: online-softmax rescaling reorders accumulation vs the oracle;
+    # error grows with head_dim (worst case hd=128 ~ 1e-4).
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=5e-4, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FA_CASES = [
+    # (b, hq, hkv, sq, hd, window, prefix, dtype)
+    (2, 4, 2, 64, 32, 0, 0, jnp.float32),
+    (1, 8, 1, 128, 64, 0, 0, jnp.float32),      # MQA
+    (1, 8, 8, 96, 32, 0, 0, jnp.float32),       # MHA, ragged blocks
+    (2, 4, 4, 96, 32, 16, 0, jnp.float32),      # sliding window
+    (1, 2, 1, 64, 32, 0, 24, jnp.float32),      # bidirectional prefix
+    (1, 4, 2, 64, 32, 8, 16, jnp.float32),      # window + prefix
+    (2, 4, 2, 64, 64, 0, 0, jnp.bfloat16),      # bf16
+    (1, 16, 4, 80, 128, 0, 0, jnp.float32),     # hd=128, non-multiple seq
+]
+
+
+@pytest.mark.parametrize("case", FA_CASES, ids=[str(c) for c in FA_CASES])
+def test_flash_attention_matches_ref(case):
+    b, hq, hkv, sq, hd, win, pre, dtype = case
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (b, hq, sq, hd), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, sq, hd), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, sq, hd), dtype)
+    out = fa_kernel(q, k, v, window=win, prefix=pre, block_q=32, block_k=32,
+                    interpret=True)
+    ref = flash_attention_ref(q, k, v, window=win, prefix=pre)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_model_layout_wrapper():
+    ks = jax.random.split(KEY, 3)
+    b, s, hq, hkv, hd = 2, 64, 4, 2, 32
+    q = jax.random.normal(ks[0], (b, s, hq, hd))
+    k = jax.random.normal(ks[1], (b, s, hkv, hd))
+    v = jax.random.normal(ks[2], (b, s, hkv, hd))
+    out = fa_ops.flash_attention(q, k, v, block_q=32, block_k=32)
+    ref = fa_ops.flash_attention_reference(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_block_size_invariance():
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 4, 128, 32))
+    k = jax.random.normal(ks[1], (1, 2, 128, 32))
+    v = jax.random.normal(ks[2], (1, 2, 128, 32))
+    outs = [np.asarray(fa_kernel(q, k, v, block_q=bq, block_k=bk,
+                                 interpret=True))
+            for bq, bk in [(32, 32), (64, 32), (32, 64), (128, 128)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+
+SSD_CASES = [
+    # (b, s, h, p, n, chunk, dtype)
+    (2, 32, 3, 8, 16, 8, jnp.float32),
+    (1, 64, 2, 16, 32, 16, jnp.float32),
+    (2, 48, 4, 8, 16, 16, jnp.float32),
+    (1, 40, 2, 8, 16, 16, jnp.float32),   # padding path (40 % 16 != 0)
+    (1, 64, 2, 64, 128, 32, jnp.float32), # production-ish dims
+    (2, 32, 2, 8, 16, 8, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", SSD_CASES, ids=[str(c) for c in SSD_CASES])
+def test_ssd_scan_matches_ref(case):
+    b, s, h, p, n, chunk, dtype = case
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (b, s, h, p), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5).astype(dtype)
+    B = jax.random.normal(ks[3], (b, s, n), dtype)
+    C = jax.random.normal(ks[4], (b, s, n), dtype)
+    out = ssd_scan(x, dt, A, B, C, chunk=chunk, interpret=True)
+    # oracle needs the chunk to divide s; any divisor gives the same fn
+    ref_chunk = chunk if s % chunk == 0 else 8
+    ref = ssd_scan_ref(x.astype(jnp.float32), dt.astype(jnp.float32),
+                       A.astype(jnp.float32), B.astype(jnp.float32),
+                       C.astype(jnp.float32), chunk=ref_chunk)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_ssd_scan_chunk_invariance():
+    ks = jax.random.split(KEY, 5)
+    b, s, h, p, n = 1, 64, 2, 8, 16
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, n))
+    C = jax.random.normal(ks[4], (b, s, n))
+    outs = [np.asarray(ssd_scan(x, dt, A, B, C, chunk=c, interpret=True))
+            for c in (8, 16, 32, 64)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(outs[0], o, rtol=1e-4, atol=1e-4)
+
+
+def test_model_uses_kernel_path():
+    """mamba_forward(impl='pallas') == mamba_forward(impl='reference')."""
+    from repro.configs import get_config, reduce
+    from repro.models import mamba2 as m2
+    cfg = reduce(get_config("mamba2_370m"))
+    p = m2.mamba_init(KEY, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(9), (2, 32, cfg.d_model)) * 0.3
+    y_ref = m2.mamba_forward(p, cfg, x, impl="reference")
+    y_ker = m2.mamba_forward(p, cfg, x, impl="pallas")
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_ker),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_attention_uses_kernel_path():
+    from repro.configs import get_config, reduce
+    from repro.models import transformer as tf
+    cfg = reduce(get_config("yi_9b"))
+    params = tf.init_params(cfg, KEY)
+    tokens = jax.random.randint(KEY, (2, 32), 0, cfg.vocab_size)
+    ref, _ = tf.forward(params, cfg, tokens, impl="reference")
+    ker, _ = tf.forward(params, cfg, tokens, impl="pallas")
+    np.testing.assert_allclose(np.asarray(ref, np.float32),
+                               np.asarray(ker, np.float32),
+                               rtol=5e-4, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# gossip combine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k,t,dtype", [
+    (2, 1024, jnp.float32), (5, 4096, jnp.float32), (8, 1000, jnp.float32),
+    (3, 70000, jnp.float32), (4, 4096, jnp.bfloat16)])
+def test_gossip_combine_matches_ref(k, t, dtype):
+    ks = jax.random.split(KEY, 2)
+    w = jax.random.normal(ks[0], (k, t), dtype)
+    a = jax.nn.softmax(jax.random.normal(ks[1], (k,)))
+    out = gossip_combine(w, a, block_t=4096, interpret=True)
+    ref = gossip_combine_ref(w, a)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@given(k=st.integers(1, 6), t=st.integers(1, 300), seed=st.integers(0, 999))
+@settings(max_examples=20, deadline=None)
+def test_gossip_combine_property(k, t, seed):
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray(rng.normal(size=(k, t)), jnp.float32)
+    a = jnp.asarray(rng.dirichlet(np.ones(k)), jnp.float32)
+    out = gossip_combine(w, a, block_t=128, interpret=True)
+    ref = gossip_combine_ref(w, a)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    # convexity: output within [min, max] envelope of inputs
+    assert float(out.max()) <= float(w.max()) + 1e-5
+    assert float(out.min()) >= float(w.min()) - 1e-5
+
+
+def test_combine_pytree_matches_tree_sum():
+    from repro.kernels.gossip_combine.ops import combine_pytree
+    tree = {"a": jax.random.normal(KEY, (3, 8, 16)),
+            "b": {"c": jax.random.normal(KEY, (3, 50))}}
+    a = jnp.asarray([0.2, 0.3, 0.5])
+    out = combine_pytree(tree, a, interpret=True)
+    ref = jax.tree.map(lambda w: jnp.einsum("k,k...->...", a, w), tree)
+    for o, r in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash-decode (one token vs KV cache)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.decode_attention.kernel import decode_attention  # noqa: E402
+from repro.kernels.decode_attention.ref import decode_attention_ref  # noqa: E402
+
+DEC_CASES = [
+    # (b, hq, hkv, s, hd, block_s, dtype)
+    (2, 4, 2, 128, 32, 32, jnp.float32),
+    (1, 8, 1, 256, 64, 64, jnp.float32),    # MQA
+    (2, 16, 4, 200, 128, 64, jnp.float32),  # ragged blocks
+    (1, 4, 4, 96, 32, 32, jnp.bfloat16),    # MHA bf16
+]
+
+
+@pytest.mark.parametrize("case", DEC_CASES, ids=[str(c) for c in DEC_CASES])
+def test_decode_attention_matches_ref(case):
+    b, hq, hkv, s, hd, bs, dtype = case
+    ks = jax.random.split(KEY, 4)
+    q = jax.random.normal(ks[0], (b, hq, hd), dtype)
+    k = jax.random.normal(ks[1], (b, hkv, s, hd), dtype)
+    v = jax.random.normal(ks[2], (b, hkv, s, hd), dtype)
+    lengths = jax.random.randint(ks[3], (b,), 1, s + 1)
+    out = decode_attention(q, k, v, lengths, block_s=bs, interpret=True)
+    ref = decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_decode_attention_respects_lengths():
+    """Entries beyond `lengths` must not affect the output at all."""
+    ks = jax.random.split(KEY, 3)
+    b, hq, hkv, s, hd = 1, 4, 2, 128, 32
+    q = jax.random.normal(ks[0], (b, hq, hd))
+    k = jax.random.normal(ks[1], (b, hkv, s, hd))
+    v = jax.random.normal(ks[2], (b, hkv, s, hd))
+    lengths = jnp.asarray([40])
+    out1 = decode_attention(q, k, v, lengths, block_s=32, interpret=True)
+    k2 = k.at[:, :, 40:].set(999.0)
+    v2 = v.at[:, :, 40:].set(-999.0)
+    out2 = decode_attention(q, k2, v2, lengths, block_s=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_decode_step_pallas_matches_reference():
+    """Full serve path: decode_step(impl='pallas') == reference, across
+
+    several steps including ring-buffer wrap (sliding-window arch)."""
+    from repro.configs import get_config, reduce
+    from repro.models import transformer as tf
+    cfg = reduce(get_config("yi_9b"))
+    params = tf.init_params(cfg, KEY)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 6), 0,
+                              cfg.vocab_size)
+    s_ref = tf.init_decode_state(cfg, 2, max_seq=16, dtype=jnp.float32)
+    s_ker = tf.init_decode_state(cfg, 2, max_seq=16, dtype=jnp.float32)
+    for i in range(6):
+        lr_, s_ref = tf.decode_step(params, cfg, toks[:, i:i + 1], s_ref,
+                                    impl="reference")
+        lk_, s_ker = tf.decode_step(params, cfg, toks[:, i:i + 1], s_ker,
+                                    impl="pallas")
+        np.testing.assert_allclose(np.asarray(lr_, np.float32),
+                                   np.asarray(lk_, np.float32),
+                                   rtol=5e-4, atol=5e-4)

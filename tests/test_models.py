@@ -1,0 +1,282 @@
+"""Per-architecture smoke tests + model-level correctness invariants.
+
+For every assigned architecture: instantiate the REDUCED same-family
+variant, run one forward/train step on CPU, assert shapes + finiteness.
+Deeper invariants: prefill<->decode logit equivalence, MoE gather
+dispatch == dense oracle, SSD chunked scan == naive recurrence,
+analytic param counts == actual init.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, all_configs, get_config, reduce
+from repro.models import mamba2, transformer as tf
+from repro.models import moe as moe_mod
+from repro.models.config import ModelConfig
+from repro.models.frontends import synthetic_prefix
+from repro.models.layers import cross_entropy
+from repro.models.small import SMALL_MODELS, param_count
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg: ModelConfig, b=2, s=32, key=KEY):
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.frontend != "none":
+        batch["prefix_embeds"] = synthetic_prefix(cfg, b)
+    return batch
+
+
+# ---------------------------------------------------------------------------
+# (f) per-arch smoke: reduced variant, one forward + one train step
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_forward_and_step(arch):
+    cfg = reduce(get_config(arch))
+    params = tf.init_params(cfg, KEY)
+    batch = _batch(cfg)
+    logits, aux = tf.forward(params, cfg, batch["tokens"],
+                             prefix_embeds=batch.get("prefix_embeds"))
+    exp_s = 32 + (batch["prefix_embeds"].shape[1]
+                  if "prefix_embeds" in batch else 0)
+    assert logits.shape == (2, exp_s, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: NaN/Inf logits"
+
+    # one SGD step decreases nothing structurally but must stay finite
+    loss, grads = jax.value_and_grad(
+        lambda p: tf.loss_fn(p, cfg, batch)[0])(params)
+    assert bool(jnp.isfinite(loss))
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree.leaves(grads)))
+    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0
+    new = jax.tree.map(lambda p, g: p - 0.01 * g.astype(p.dtype), params, grads)
+    loss2, _ = tf.loss_fn(new, cfg, batch)
+    assert bool(jnp.isfinite(loss2))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_decode_smoke(arch):
+    cfg = reduce(get_config(arch))
+    params = tf.init_params(cfg, KEY)
+    state = tf.init_decode_state(cfg, batch=2, max_seq=48, dtype=jnp.float32)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    step = jax.jit(lambda t, s: tf.decode_step(params, cfg, t, s))
+    for i in range(4):
+        logits, state = step(tok, state)
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+    assert int(state.position) == 4
+
+
+# ---------------------------------------------------------------------------
+# prefill <-> decode equivalence (the serving path computes the same model)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["yi_9b", "qwen2_7b", "gemma3_27b",
+                                  "granite_moe_1b", "mamba2_370m",
+                                  "zamba2_1p2b", "musicgen_large"])
+def test_prefill_decode_equivalence(arch):
+    cfg = reduce(get_config(arch))
+    params = tf.init_params(cfg, KEY)
+    b, s = 2, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(7), (b, s), 0,
+                                cfg.vocab_size)
+    # vlm needs a prefix; skip it here (prefix positions differ) — its
+    # decode path is exercised in the smoke test above. MoE uses the
+    # dense dispatch on both sides: gather capacity effects differ
+    # between prefill (T tokens) and decode (1 token) by design and are
+    # covered by test_moe_capacity_drops_tokens_gracefully.
+    full_logits, _ = tf.forward(params, cfg, tokens, moe_impl="dense")
+    state = tf.init_decode_state(cfg, b, max_seq=s + 4, dtype=jnp.float32)
+    outs = []
+    for i in range(s):
+        lg, state = tf.decode_step(params, cfg, tokens[:, i:i + 1], state,
+                                   moe_impl="dense")
+        outs.append(lg[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full_logits, np.float32),
+                               np.asarray(dec_logits, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_sliding_window_decode_matches_prefill():
+    """gemma3-style ring-buffer caches must agree with masked prefill even
+
+    once the window has wrapped."""
+    cfg = reduce(get_config("gemma3_27b"))
+    assert cfg.sliding_window == 16 and cfg.global_every == 2
+    params = tf.init_params(cfg, KEY)
+    b, s = 1, 24  # > window so the ring buffer wraps
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (b, s), 0,
+                                cfg.vocab_size)
+    full_logits, _ = tf.forward(params, cfg, tokens)
+    state = tf.init_decode_state(cfg, b, max_seq=s, dtype=jnp.float32)
+    outs = []
+    for i in range(s):
+        lg, state = tf.decode_step(params, cfg, tokens[:, i:i + 1], state)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full_logits, np.float32),
+                               np.asarray(dec, np.float32),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# MoE: gather dispatch == dense oracle when capacity is ample
+# ---------------------------------------------------------------------------
+
+
+def test_moe_gather_matches_dense():
+    cfg = reduce(get_config("granite_moe_1b"))
+    p = moe_mod.moe_init(KEY, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    out_d, aux_d = moe_mod.moe(p, cfg, x, impl="dense")
+    # capacity_factor large enough that nothing is dropped
+    out_g, aux_g = moe_mod.moe(p, cfg, x, impl="gather",
+                               capacity_factor=float(cfg.num_experts))
+    np.testing.assert_allclose(np.asarray(out_d), np.asarray(out_g),
+                               rtol=2e-3, atol=1e-3)
+    # gather routes per batch row (shard-local dispatch): its aux loss
+    # is the mean of per-row Switch losses, a slightly different
+    # estimator than dense's global one
+    np.testing.assert_allclose(float(aux_d), float(aux_g), rtol=1e-3)
+
+
+def test_moe_capacity_drops_tokens_gracefully():
+    cfg = reduce(get_config("phi3p5_moe"))
+    p = moe_mod.moe_init(KEY, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 32, cfg.d_model))
+    out, _ = moe_mod.moe(p, cfg, x, impl="gather", capacity_factor=0.25)
+    assert bool(jnp.isfinite(out).all())
+    # With tiny capacity some tokens get zero update; norm must shrink.
+    out_full, _ = moe_mod.moe(p, cfg, x, impl="gather",
+                              capacity_factor=float(cfg.num_experts))
+    assert float(jnp.linalg.norm(out)) < float(jnp.linalg.norm(out_full))
+
+
+def test_moe_aux_loss_uniform_router_is_one():
+    """With perfectly uniform routing the Switch aux loss equals 1."""
+    cfg = reduce(get_config("granite_moe_1b"))
+    p = moe_mod.moe_init(KEY, cfg, jnp.float32)
+    p = dict(p)
+    p["router"] = jnp.zeros_like(p["router"])  # uniform probs
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 64, cfg.d_model))
+    _, aux = moe_mod.moe(p, cfg, x, impl="dense")
+    assert float(aux) == pytest.approx(1.0, rel=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# SSD: chunked dual form == naive recurrence
+# ---------------------------------------------------------------------------
+
+
+def _ssd_naive(x, dt, A, B, C):
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+
+    def step(hstate, inp):
+        xt, dtt, Bt, Ct = inp  # (b,h,p), (b,h), (b,n), (b,n)
+        decay = jnp.exp(dtt * A)  # (b,h)
+        hstate = hstate * decay[..., None, None] + jnp.einsum(
+            "bhp,bn,bh->bhpn", xt, Bt, dtt)
+        y = jnp.einsum("bhpn,bn->bhp", hstate, Ct)
+        return hstate, y
+
+    h0 = jnp.zeros((b, h, p, n))
+    _, ys = jax.lax.scan(step, h0, (jnp.moveaxis(x, 1, 0),
+                                    jnp.moveaxis(dt, 1, 0),
+                                    jnp.moveaxis(B, 1, 0),
+                                    jnp.moveaxis(C, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16])
+@pytest.mark.parametrize("seq", [16, 32])
+def test_ssd_chunked_matches_naive(chunk, seq):
+    rng = jax.random.PRNGKey(4)
+    ks = jax.random.split(rng, 5)
+    b, h, p, n = 2, 3, 8, 16
+    x = jax.random.normal(ks[0], (b, seq, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, seq, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    B = jax.random.normal(ks[3], (b, seq, n))
+    C = jax.random.normal(ks[4], (b, seq, n))
+    y_chunk = mamba2.ssd_reference(x, dt, A, B, C, chunk=chunk)
+    y_naive = _ssd_naive(x, dt, A, B, C)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_naive),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mamba_decode_matches_forward():
+    """Recurrent decode == full-sequence SSD on the same layer."""
+    cfg = reduce(get_config("mamba2_370m"))
+    p = mamba2.mamba_init(KEY, cfg, jnp.float32)
+    b, s = 2, 16
+    x = jax.random.normal(jax.random.PRNGKey(5), (b, s, cfg.d_model)) * 0.3
+    y_full = mamba2.mamba_forward(p, cfg, x)
+    ssm = jnp.zeros((b, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state))
+    conv = jnp.zeros((b, cfg.ssm_conv - 1, cfg.ssm_inner + 2 * cfg.ssm_state))
+    outs = []
+    for i in range(s):
+        y, ssm, conv = mamba2.mamba_decode(p, cfg, x[:, i:i + 1], ssm, conv)
+        outs.append(y[:, 0])
+    y_dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_dec),
+                               rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# param accounting
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_matches_init(arch):
+    cfg = reduce(get_config(arch))
+    params = tf.init_params(cfg, KEY)
+    actual = param_count(params)
+    analytic = cfg.param_count()
+    assert abs(actual - analytic) / analytic < 0.03, \
+        f"{arch}: analytic {analytic} vs actual {actual}"
+
+
+# ---------------------------------------------------------------------------
+# the paper's own models
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(SMALL_MODELS))
+def test_small_models_train_step(name):
+    spec = SMALL_MODELS[name]
+    params = spec.init(KEY)
+    b = 8
+    if spec.input_dtype == "int32":
+        x = jax.random.randint(KEY, (b,) + spec.input_shape, 0, 1000)
+    else:
+        x = jax.random.normal(KEY, (b,) + spec.input_shape)
+    y = jax.random.randint(KEY, (b,), 0, spec.num_classes)
+    batch = {"x": x, "y": y}
+    loss, grads = jax.value_and_grad(spec.loss)(params, batch)
+    assert bool(jnp.isfinite(loss))
+    new = jax.tree.map(lambda p, g: p - 0.01 * g, params, grads)
+    assert spec.loss(new, batch) < float(loss) + 1e-6
+
+
+def test_small_model_param_budgets():
+    """Table 2: CNN ~1.2M, LSTM ~4.8M, ResNet ~11.2M."""
+    import numpy as np
+    budgets = {"femnist_cnn": (1.0e6, 2.0e6),
+               "sent140_lstm": (3.0e6, 6.0e6),
+               "inat_resnet": (9.0e6, 13.0e6)}
+    for name, (lo, hi) in budgets.items():
+        spec = SMALL_MODELS[name]
+        n = param_count(spec.init(KEY))
+        assert lo <= n <= hi, f"{name}: {n} params outside [{lo},{hi}]"

@@ -1,0 +1,70 @@
+"""End-to-end behaviour tests: the paper's headline claims exercised
+
+through the full stack (construction -> parsing -> schedule -> DPASGD
+training -> timing), in CI-sized form."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.delay import FEMNIST
+from repro.core.simulator import simulate
+from repro.fl.trainer import FLConfig, run_fl
+from repro.launch.train import TrainConfig, run_reduced_fl
+from repro.networks.zoo import get_network
+
+
+def test_headline_cycle_time_reduction():
+    """Claim 1 (Table 1): the multigraph reduces cycle time vs every
+
+    baseline on the paper's networks."""
+    for netname in ("gaia", "amazon"):
+        net = get_network(netname)
+        ours = simulate("multigraph", net, FEMNIST, num_rounds=400)
+        for baseline in ("star", "mst", "ring"):
+            other = simulate(baseline, net, FEMNIST, num_rounds=400)
+            assert ours.mean_cycle_ms < other.mean_cycle_ms, \
+                (netname, baseline)
+
+
+def test_headline_accuracy_preserved():
+    """Claim 2 (Tables 4/5 + Fig. 5): at EQUAL WALL-CLOCK the multigraph
+
+    is at least as accurate as RING (its rounds are ~3x shorter, so it
+    fits ~3x more of them into the same budget) — the paper's actual
+    accuracy claim; per-round it may briefly trail (stale buffers)."""
+    base = dict(dataset="femnist", network="gaia", eval_every=1000,
+                samples_per_silo=64, batch_size=16, lr=0.05, seed=2)
+    ours = run_fl(FLConfig(topology="multigraph", rounds=60, **base))
+    ring_probe = run_fl(FLConfig(topology="ring", rounds=1, **base))
+    # rounds RING affords within ours' wall-clock budget
+    budget_rounds = max(
+        1, int(60 * ours.mean_cycle_ms / ring_probe.mean_cycle_ms))
+    ring = run_fl(FLConfig(topology="ring", rounds=budget_rounds, **base))
+    assert ours.mean_cycle_ms < ring.mean_cycle_ms
+    assert ours.final_acc() >= ring.final_acc() - 0.02
+    assert ours.final_acc() > 3 / 62  # far beyond chance
+    removed = run_fl(FLConfig(topology="ring", rounds=20, remove_silos=4,
+                              remove_strategy="inefficient", **base))
+    assert removed.mean_cycle_ms < ring.mean_cycle_ms
+
+
+def test_llm_fl_end_to_end():
+    """Deliverable (b): the FL runtime drives the assigned-architecture
+
+    model stack end to end (reduced zamba2 hybrid across 3 silos)."""
+    out = run_reduced_fl(TrainConfig(arch="zamba2-1.2b", topology="multigraph",
+                                     silos=3, rounds=8, lr=2e-2,
+                                     batch_size=2, seq_len=16))
+    assert np.isfinite(out["losses"]).all()
+    assert out["loss_last"] <= out["loss_first"] + 0.1
+    assert out["sim_mean_cycle_ms"] > 0
+
+
+def test_t1_schedule_degenerates_to_ring():
+    """t=1 multigraph == RING overlay semantics (paper Table 6 row 1)."""
+    net = get_network("gaia")
+    rep = simulate("multigraph", net, FEMNIST, num_rounds=100, t=1)
+    assert rep.num_states == 1
+    assert rep.rounds_with_isolated == 0
