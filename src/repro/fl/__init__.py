@@ -1,5 +1,8 @@
 from repro.fl.dpasgd import FLSimState, make_round_schedule, RoundPlan
+from repro.fl.runtime import (FlatFLState, FlatRuntime, init_flat_state,
+                              make_cycle_fn, make_flat_runtime)
 from repro.fl.trainer import FLConfig, run_fl
 
 __all__ = ["FLSimState", "RoundPlan", "make_round_schedule", "FLConfig",
-           "run_fl"]
+           "run_fl", "FlatFLState", "FlatRuntime", "make_flat_runtime",
+           "init_flat_state", "make_cycle_fn"]

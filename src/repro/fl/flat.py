@@ -1,0 +1,94 @@
+"""Flat-parameter packing for the FL runtime (DESIGN.md §9).
+
+The simulation keeps N silo replicas and 2E edge buffers of the same
+model. Stored as pytrees this means every aggregation/refresh op runs
+once per leaf — dozens of small HBM-bound dispatches per round. This
+module packs a pytree into ONE contiguous fp32 vector (and a stacked
+pytree into one `(N, T)` matrix) with an exact unravel spec, so the hot
+path streams a single buffer:
+
+    spec = make_flat_spec(params)           # from one replica
+    flat = ravel(spec, params)              # (T,)
+    back = unravel(spec, flat)              # == params (bitwise in f32)
+    mat  = ravel_stacked(spec, stacked)     # leaves (N, ...) -> (N, T)
+
+Unravel is slices + reshapes only, so taking `jax.grad` through
+`loss(unravel(spec, v))` yields the flat gradient with no extra
+arithmetic — local SGD, buffer refresh and edge aggregation all become
+single-array ops.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatSpec:
+    """Layout of a pytree inside one flat vector."""
+
+    treedef: Any
+    shapes: tuple[tuple[int, ...], ...]
+    dtypes: tuple[Any, ...]
+    offsets: tuple[int, ...]   # start of each leaf in the flat vector
+    size: int                  # T — total number of elements
+    dtype: Any                 # storage dtype of the flat buffer
+
+    def __len__(self) -> int:
+        return self.size
+
+
+def make_flat_spec(tree: Params, dtype=jnp.float32) -> FlatSpec:
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = tuple(tuple(l.shape) for l in leaves)
+    dtypes = tuple(l.dtype for l in leaves)
+    sizes = [int(np.prod(s)) if s else 1 for s in shapes]
+    offsets = tuple(int(o) for o in np.cumsum([0] + sizes[:-1]))
+    return FlatSpec(treedef=treedef, shapes=shapes, dtypes=dtypes,
+                    offsets=offsets, size=int(sum(sizes)), dtype=dtype)
+
+
+def ravel(spec: FlatSpec, tree: Params) -> jax.Array:
+    """Pytree -> (T,) in spec order."""
+    leaves = spec.treedef.flatten_up_to(tree)
+    return jnp.concatenate(
+        [jnp.asarray(l).astype(spec.dtype).reshape(-1) for l in leaves])
+
+
+def unravel(spec: FlatSpec, flat: jax.Array) -> Params:
+    """(T,) -> pytree (leaf dtypes restored)."""
+    leaves = []
+    for shape, dt, off in zip(spec.shapes, spec.dtypes, spec.offsets):
+        n = int(np.prod(shape)) if shape else 1
+        leaves.append(
+            jax.lax.dynamic_slice_in_dim(flat, off, n).reshape(shape)
+            .astype(dt))
+    return jax.tree.unflatten(spec.treedef, leaves)
+
+
+def ravel_stacked(spec: FlatSpec, tree: Params) -> jax.Array:
+    """Pytree with leading stack axis on every leaf -> (N, T)."""
+    leaves = spec.treedef.flatten_up_to(tree)
+    n = jax.tree.leaves(tree)[0].shape[0]
+    return jnp.concatenate(
+        [jnp.asarray(l).astype(spec.dtype).reshape(n, -1) for l in leaves],
+        axis=1)
+
+
+def unravel_stacked(spec: FlatSpec, flat: jax.Array) -> Params:
+    """(N, T) -> pytree with leading axis N on every leaf."""
+    n = flat.shape[0]
+    leaves = []
+    for shape, dt, off in zip(spec.shapes, spec.dtypes, spec.offsets):
+        cnt = int(np.prod(shape)) if shape else 1
+        leaves.append(
+            jax.lax.dynamic_slice_in_dim(flat, off, cnt, axis=1)
+            .reshape((n,) + shape).astype(dt))
+    return jax.tree.unflatten(spec.treedef, leaves)

@@ -37,6 +37,14 @@ import jax.numpy as jnp
 Params = Any
 
 
+def _axis_size(axis: str) -> int:
+    """Static mesh-axis size inside shard_map, across jax versions."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    import jax.core as _core  # 0.4.x: the frame IS the size
+    return int(_core.axis_frame(axis))
+
+
 def gossip_dense(params: Params, a_matrix: jax.Array, axis: str) -> Params:
     """w_i <- sum_j A[i,j] w_j via all_gather along `axis`.
 
@@ -77,7 +85,7 @@ def gossip_ring_ppermute(params: Params, buffers: dict, *,
 
     Returns (new_params, new_buffers).
     """
-    n = jax.lax.axis_size(axis)
+    n = _axis_size(axis)
     idx = jax.lax.axis_index(axis)
     left_perm, right_perm = _ring_perms(n)
 
@@ -100,11 +108,17 @@ def gossip_ring_ppermute(params: Params, buffers: dict, *,
     cr = jax.lax.dynamic_index_in_dim(coeff_right, idx, keepdims=False)
 
     if use_kernel:
-        from repro.kernels.gossip_combine.ops import combine_pytree
-        stacked = jax.tree.map(lambda a, b, c: jnp.stack([a, b, c]),
-                               params, recv_from_left, recv_from_right)
+        # Pack the whole replica flat and combine in ONE kernel call
+        # (one HBM pass over 3 * |model| bytes) instead of one
+        # per-leaf kernel launch each; see repro/fl/flat.py.
+        from repro.fl.flat import make_flat_spec, ravel, unravel
+        from repro.kernels.gossip_combine.ops import gossip_combine
+        spec = make_flat_spec(params)
+        stacked = jnp.stack([ravel(spec, params),
+                             ravel(spec, recv_from_left),
+                             ravel(spec, recv_from_right)])
         coeffs = jnp.stack([cs, cl, cr]).astype(jnp.float32)
-        new = combine_pytree(stacked, coeffs)
+        new = unravel(spec, gossip_combine(stacked, coeffs))
     else:
         def leaf(w, lw, rw):
             acc = (cs.astype(jnp.float32) * w.astype(jnp.float32) +

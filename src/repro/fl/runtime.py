@@ -1,0 +1,200 @@
+"""Whole-cycle flat-parameter FL runtime (DESIGN.md §9).
+
+The legacy simulation (`fl/dpasgd.py`) dispatches one jitted step per
+communication round and aggregates with a per-leaf `segment_sum` over
+`(2E, ...)` buffers. This runtime removes both costs:
+
+  * all N silo replicas live in ONE contiguous `(N, T)` fp32 buffer and
+    the 2E directed-edge buffers in ONE `(2E, T)` buffer (repro/fl/flat),
+    kept in dst-sorted CSR order so aggregation is a single array op
+    (the `edge_aggregate` Pallas kernel on TPU, its `segment_sum` twin
+    on CPU);
+  * a full multigraph cycle of R rounds is ONE compiled dispatch:
+    `lax.scan` over the `RoundPlan`'s `(R, ·)` strong/coeffs/diag arrays
+    with the state donated, so a cycle has zero host round-trips and the
+    cycle function traces/compiles exactly once for a given shape.
+
+Semantics are bit-for-bit fp32-identical to R calls of the legacy
+`fl_round_step` (tests/test_flat_runtime.py): the stable dst-sort keeps
+`segment_sum`'s accumulation order, and local SGD/refresh are the same
+elementwise ops on a packed layout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl import flat as flatmod
+from repro.fl.dpasgd import RoundPlan
+from repro.kernels.gossip_combine import ops as gossip_ops
+from repro.kernels.gossip_combine.ref import (dense_edge_aggregate,
+                                              edge_aggregate_ref)
+
+Params = Any
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FlatFLState:
+    """Simulation state in packed layout.
+
+    w (N, T) flat silo params; opt_state: flat-optimizer state pytree
+    ((N, T) leaves + scalars); buffers (2E, T) edge buffers in
+    DST-SORTED order (buffers[e] = last weights of src(e) seen by
+    dst(e), h rounds stale over weak edges).
+    """
+
+    w: jax.Array
+    opt_state: Any
+    buffers: jax.Array
+
+    def tree_flatten(self):
+        return (self.w, self.opt_state, self.buffers), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+@dataclasses.dataclass(frozen=True)
+class FlatRuntime:
+    """Host-side compiled-plan bundle: flat layout + CSR edge order."""
+
+    spec: flatmod.FlatSpec
+    num_silos: int
+    order: np.ndarray        # (2E,) original-edge -> sorted position perm
+    row_ptr: np.ndarray      # (N+1,) int32 CSR offsets
+    src_sorted: np.ndarray   # (2E,) int32
+    dst_sorted: np.ndarray   # (2E,) int32 (non-decreasing)
+    strong: np.ndarray       # (R, 2E) bool, sorted edge order
+    coeffs: np.ndarray       # (R, 2E) f32, sorted edge order
+    diag: np.ndarray         # (R, N) f32
+
+    @property
+    def num_rounds_cycle(self) -> int:
+        return self.strong.shape[0]
+
+
+def make_flat_runtime(plan: RoundPlan, template_params: Params,
+                      num_silos: int) -> FlatRuntime:
+    """Sort the plan's directed edges by destination once, host-side."""
+    spec = flatmod.make_flat_spec(template_params)
+    order, row_ptr = gossip_ops.csr_sort(plan.dst, num_silos)
+    return FlatRuntime(
+        spec=spec, num_silos=num_silos, order=order, row_ptr=row_ptr,
+        src_sorted=plan.src[order].astype(np.int32),
+        dst_sorted=plan.dst[order].astype(np.int32),
+        strong=plan.strong[:, order],
+        coeffs=plan.coeffs[:, order].astype(np.float32),
+        diag=plan.diag.astype(np.float32))
+
+
+def init_flat_state(init_params: Callable[[jax.Array], Params], opt,
+                    rt: FlatRuntime, key: jax.Array) -> FlatFLState:
+    """Mirror of dpasgd.init_fl_state in packed layout (bitwise equal)."""
+    keys = jax.random.split(key, rt.num_silos)
+    p0 = init_params(keys[0])  # identical init across silos
+    w0 = flatmod.ravel(rt.spec, p0)
+    w = jnp.broadcast_to(w0[None], (rt.num_silos, rt.spec.size)).copy()
+    opt_state = opt.init(w)
+    buffers = w[jnp.asarray(rt.src_sorted)]
+    return FlatFLState(w, opt_state, buffers)
+
+
+def make_cycle_fn(rt: FlatRuntime, *, loss_fn, opt, lr_scale=1.0,
+                  aggregator: str | None = None,
+                  donate: bool | None = None):
+    """Build the once-compiled whole-cycle step.
+
+    Returns `cycle(state, batches, strong, coeffs, diag) ->
+    (state, losses)` where batches has leaves `(R, u, N, b, ...)` and
+    the plan slices are `(R, 2E)/(R, N)` in the runtime's sorted edge
+    order. R is whatever slice of the cycle the caller passes — the jit
+    specializes per R and the attached `cycle.trace_count["count"]`
+    records how often tracing actually ran (the whole point: once).
+
+    aggregator: "kernel" (Pallas `edge_aggregate`, interpret-mode off
+    TPU), "reference" (`segment_sum` twin — bit-for-bit equal to the
+    legacy per-leaf lowering), or "dense" (uniform-in-degree overlays
+    only, e.g. any ring: reshapes the sorted buffers to (N, d, T) and
+    reduces densely — no scatter, ~4x faster on XLA:CPU, same
+    accumulation order up to FMA fusion). Default: kernel on TPU,
+    reference elsewhere.
+    """
+    if aggregator is None:
+        aggregator = "kernel" if jax.default_backend() == "tpu" else \
+            "reference"
+    degrees = np.diff(rt.row_ptr)
+    if aggregator == "dense":
+        if degrees.size == 0 or (degrees != degrees[0]).any():
+            raise ValueError("aggregator='dense' needs a uniform in-degree; "
+                             f"got {degrees}")
+        deg = int(degrees[0])
+    if donate is None:
+        # buffer donation is a no-op (plus a warning) on XLA:CPU
+        donate = jax.default_backend() != "cpu"
+    spec = rt.spec
+    row_ptr = jnp.asarray(rt.row_ptr)
+    dst_sorted = jnp.asarray(rt.dst_sorted)
+    src_sorted = jnp.asarray(rt.src_sorted)
+    counter = {"count": 0}
+
+    def flat_loss(w_row, batch):
+        return loss_fn(flatmod.unravel(spec, w_row), batch)
+
+    def round_body(carry, xs):
+        w, os_, buf = carry
+        batches, strong_r, coeffs_r, diag_r = xs
+
+        def local_step(c, batch_u):
+            w, os_ = c
+            loss, grads = jax.vmap(jax.value_and_grad(flat_loss))(w, batch_u)
+            w, os_ = opt.update(w, grads, os_, lr_scale)
+            return (w, os_), loss
+
+        (w, os_), losses = jax.lax.scan(local_step, (w, os_), batches)
+
+        # buffer refresh on strong edges (fresh w_src), else keep stale
+        buf = jnp.where(strong_r[:, None], w[src_sorted], buf)
+
+        # aggregation: w_i <- diag_i * w_i + sum_{e in row i} c_e * buf_e
+        if aggregator == "kernel":
+            w = gossip_ops.edge_aggregate(w, buf, coeffs_r, row_ptr, diag_r)
+        elif aggregator == "dense":
+            w = dense_edge_aggregate(w, buf,
+                                     coeffs_r.reshape(w.shape[0], deg),
+                                     diag_r)
+        else:
+            w = edge_aggregate_ref(w, buf, coeffs_r, dst_sorted, diag_r)
+        return (w, os_, buf), jnp.mean(losses)
+
+    def cycle(state, batches, strong, coeffs, diag):
+        counter["count"] += 1
+        carry = (state.w, state.opt_state, state.buffers)
+        (w, os_, buf), losses = jax.lax.scan(
+            round_body, carry, (batches, strong, coeffs, diag))
+        return FlatFLState(w, os_, buf), losses
+
+    jitted = jax.jit(cycle, donate_argnums=(0,) if donate else ())
+
+    def run(state, batches, strong, coeffs, diag):
+        return jitted(state, batches, strong, coeffs, diag)
+
+    run.trace_count = counter
+    return run
+
+
+def unpack_params(rt: FlatRuntime, state: FlatFLState) -> Params:
+    """(N, T) -> stacked pytree with leading silo axis (legacy layout)."""
+    return flatmod.unravel_stacked(rt.spec, state.w)
+
+
+def unpack_buffers(rt: FlatRuntime, state: FlatFLState) -> Params:
+    """Sorted (2E, T) -> stacked pytree in ORIGINAL edge order."""
+    inv = np.argsort(rt.order)
+    return flatmod.unravel_stacked(rt.spec, state.buffers[jnp.asarray(inv)])

@@ -3,6 +3,19 @@
 + synthetic federated data, and pairs the learning curve with the
 cycle-time simulator so results can be plotted against wall-clock time
 (paper Fig. 5).
+
+Two runtimes share one code path (`FLConfig.runtime`):
+
+  * "flat" (default) — the flat-parameter whole-cycle runtime
+    (repro/fl/runtime.py, DESIGN.md §9): params/opt-state/edge buffers
+    are packed `(N, T)`/`(2E, T)` arrays and a full multigraph cycle of
+    R rounds is ONE jitted dispatch (`lax.scan` over the RoundPlan
+    arrays). The training loop advances cycle-at-a-time; eval hooks
+    keep per-round granularity by splitting cycles at eval boundaries.
+  * "legacy" — one jitted `fl_round_step` dispatch per round over
+    stacked pytrees. Bit-for-bit fp32-identical learning curves
+    (momentum=0; see tests/test_flat_runtime.py), kept as the
+    equivalence oracle.
 """
 
 from __future__ import annotations
@@ -48,6 +61,9 @@ class FLConfig:
     # Table 4 ablation: remove silos from the RING overlay.
     remove_silos: int = 0
     remove_strategy: str = "none"  # none | random | inefficient
+    # "flat" = whole-cycle flat-parameter runtime; "legacy" = per-round
+    # stacked-pytree steps (kept as the equivalence oracle).
+    runtime: str = "flat"
 
 
 @dataclasses.dataclass
@@ -109,6 +125,20 @@ def _cycle_times(cfg: FLConfig, net: NetworkSpec, wl: Workload,
     return [rep.mean_cycle_ms] * rounds
 
 
+def _sample_round(data, n: int, cfg: FLConfig, rng) -> tuple[np.ndarray,
+                                                             np.ndarray]:
+    """One round of micro batches, (u, N, b, ...) — the draw ORDER is
+    the contract: both runtimes consume the same rng stream identically,
+    so learning curves are comparable across `cfg.runtime`."""
+    xs, ys = [], []
+    for _ in range(cfg.local_updates):
+        per_silo = [data.sample_batch(s, cfg.batch_size, rng)
+                    for s in range(n)]
+        xs.append(np.stack([b["x"] for b in per_silo]))
+        ys.append(np.stack([b["y"] for b in per_silo]))
+    return np.stack(xs), np.stack(ys)
+
+
 def run_fl(cfg: FLConfig) -> FLResult:
     wl = WORKLOADS[_DATASET_WL[cfg.dataset]]
     net = get_network(cfg.network)
@@ -124,44 +154,74 @@ def run_fl(cfg: FLConfig) -> FLResult:
 
     plan = dpasgd.make_round_schedule(cfg.topology, net, wl, t=cfg.t,
                                       rounds=cfg.rounds, seed=cfg.seed)
-    opt = sgd(cfg.lr, momentum=cfg.momentum)
     key = jax.random.PRNGKey(cfg.seed)
-    state = dpasgd.init_fl_state(spec.init, opt, n, plan.src, key)
-
     loss_fn = lambda p, b: spec.loss(p, b)
-    step = jax.jit(lambda st, batches, s, c, d: dpasgd.fl_round_step(
-        st, batches, plan.src, plan.dst, s, c, d,
-        loss_fn=loss_fn, opt=opt, local_updates=cfg.local_updates))
-
-    eval_params_fn = jax.jit(
-        lambda w: jax.tree.map(lambda x: jnp.mean(x, axis=0), w))
     test_batch = {"x": jnp.asarray(data.test_x),
                   "y": jnp.asarray(data.test_y)}
     acc_fn = jax.jit(lambda p: spec.accuracy(p, test_batch))
 
     rng = np.random.default_rng(cfg.seed + 1)
     r_cycle = plan.num_rounds_cycle
-
     round_losses, eval_rounds, eval_accs = [], [], []
-    for k in range(cfg.rounds):
-        xs, ys = [], []
-        for _ in range(cfg.local_updates):
-            per_silo = [data.sample_batch(s, cfg.batch_size, rng)
-                        for s in range(n)]
-            xs.append(np.stack([b["x"] for b in per_silo]))
-            ys.append(np.stack([b["y"] for b in per_silo]))
-        batches = {"x": jnp.asarray(np.stack(xs)),
-                   "y": jnp.asarray(np.stack(ys))}
-        pk = k % r_cycle
-        state, loss = step(state, batches,
-                           jnp.asarray(plan.strong[pk]),
-                           jnp.asarray(plan.coeffs[pk]),
-                           jnp.asarray(plan.diag[pk]))
-        round_losses.append(float(loss))
-        if (k + 1) % cfg.eval_every == 0 or k == cfg.rounds - 1:
-            acc = float(acc_fn(eval_params_fn(state.silo_params)))
-            eval_rounds.append(k + 1)
-            eval_accs.append(acc)
+
+    if cfg.runtime == "flat":
+        from repro.fl import flat as flatmod
+        from repro.fl import runtime as flrt
+        from repro.optim import flat_sgd
+        opt = flat_sgd(cfg.lr, momentum=cfg.momentum)
+        template = jax.eval_shape(spec.init, key)
+        rt = flrt.make_flat_runtime(plan, template, n)
+        state = flrt.init_flat_state(spec.init, opt, rt, key)
+        cycle_fn = flrt.make_cycle_fn(rt, loss_fn=loss_fn, opt=opt)
+        eval_params_fn = jax.jit(
+            lambda w: flatmod.unravel(rt.spec, jnp.mean(w, axis=0)))
+
+        k = 0
+        while k < cfg.rounds:
+            # advance a whole cycle per dispatch, splitting at eval
+            # boundaries so eval hooks keep per-round granularity
+            next_stop = min((k // cfg.eval_every + 1) * cfg.eval_every,
+                            cfg.rounds)
+            chunk = min(r_cycle, next_stop - k)
+            per_round = [_sample_round(data, n, cfg, rng)
+                         for _ in range(chunk)]
+            batches = {"x": jnp.asarray(np.stack([x for x, _ in per_round])),
+                       "y": jnp.asarray(np.stack([y for _, y in per_round]))}
+            pks = [(k + j) % r_cycle for j in range(chunk)]
+            state, losses = cycle_fn(state, batches,
+                                     jnp.asarray(rt.strong[pks]),
+                                     jnp.asarray(rt.coeffs[pks]),
+                                     jnp.asarray(rt.diag[pks]))
+            round_losses.extend(float(x) for x in np.asarray(losses))
+            k += chunk
+            if k % cfg.eval_every == 0 or k == cfg.rounds:
+                acc = float(acc_fn(eval_params_fn(state.w)))
+                eval_rounds.append(k)
+                eval_accs.append(acc)
+    elif cfg.runtime == "legacy":
+        opt = sgd(cfg.lr, momentum=cfg.momentum)
+        state = dpasgd.init_fl_state(spec.init, opt, n, plan.src, key)
+        step = jax.jit(lambda st, batches, s, c, d: dpasgd.fl_round_step(
+            st, batches, plan.src, plan.dst, s, c, d,
+            loss_fn=loss_fn, opt=opt, local_updates=cfg.local_updates))
+        eval_params_fn = jax.jit(
+            lambda w: jax.tree.map(lambda x: jnp.mean(x, axis=0), w))
+
+        for k in range(cfg.rounds):
+            xs, ys = _sample_round(data, n, cfg, rng)
+            batches = {"x": jnp.asarray(xs), "y": jnp.asarray(ys)}
+            pk = k % r_cycle
+            state, loss = step(state, batches,
+                               jnp.asarray(plan.strong[pk]),
+                               jnp.asarray(plan.coeffs[pk]),
+                               jnp.asarray(plan.diag[pk]))
+            round_losses.append(float(loss))
+            if (k + 1) % cfg.eval_every == 0 or k == cfg.rounds - 1:
+                acc = float(acc_fn(eval_params_fn(state.silo_params)))
+                eval_rounds.append(k + 1)
+                eval_accs.append(acc)
+    else:
+        raise ValueError(f"unknown runtime {cfg.runtime!r}")
 
     cycle = _cycle_times(cfg, net, wl, cfg.rounds)
     return FLResult(config=cfg, round_losses=round_losses,

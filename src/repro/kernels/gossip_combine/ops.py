@@ -1,8 +1,13 @@
-"""Public wrapper: pytree-level fused gossip combine.
+"""Public wrappers: pytree-level fused gossip combine + CSR aggregation.
 
-`combine_pytree` applies the kernel leaf-wise over a stacked params
-pytree (leading neighbor axis K), which is exactly the shape produced by
-the FL gossip backends (repro/fl/gossip.py).
+`combine_pytree` applies the fixed-K kernel leaf-wise over a stacked
+params pytree (leading neighbor axis K) — the shape produced by the FL
+gossip backends (repro/fl/gossip.py).
+
+`csr_sort` builds the host-side CSR plan (dst-sorted edge permutation +
+row offsets) that `edge_aggregate` consumes; the flat FL runtime
+(repro/fl/runtime.py) sorts once per plan and keeps its edge buffers in
+sorted order so every aggregation is a single kernel call.
 """
 
 from __future__ import annotations
@@ -11,6 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.gossip_combine.kernel import edge_aggregate as _edge_kernel
 from repro.kernels.gossip_combine.kernel import gossip_combine as _kernel
 
 
@@ -32,3 +38,32 @@ def combine_pytree(stacked_params, coeffs: jax.Array, *,
             w.shape[1:])
 
     return jax.tree.map(leaf, stacked_params)
+
+
+def csr_sort(dst: np.ndarray, num_nodes: int) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side CSR plan for a directed edge list.
+
+    Returns (order, row_ptr): `order` permutes edge-indexed arrays into
+    dst-sorted layout (stable, so within a destination the original
+    edge order — and therefore `segment_sum`'s fp accumulation order —
+    is preserved); `row_ptr[i]:row_ptr[i+1]` spans destination i's
+    incoming edges in the sorted arrays. Isolated destinations get an
+    empty span.
+    """
+    dst = np.asarray(dst)
+    order = np.argsort(dst, kind="stable").astype(np.int32)
+    counts = np.bincount(dst, minlength=num_nodes)
+    row_ptr = np.zeros(num_nodes + 1, np.int32)
+    row_ptr[1:] = np.cumsum(counts).astype(np.int32)
+    return order, row_ptr
+
+
+def edge_aggregate(w: jax.Array, buf: jax.Array, coeffs: jax.Array,
+                   row_ptr: jax.Array, diag: jax.Array, *,
+                   block_t: int = 65536,
+                   interpret: bool | None = None) -> jax.Array:
+    """CSR edge aggregation (see kernel.py). buf/coeffs dst-sorted."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _edge_kernel(w, buf, coeffs, row_ptr, diag,
+                        block_t=block_t, interpret=interpret)

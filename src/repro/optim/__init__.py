@@ -8,7 +8,7 @@ the FL trainer can implement the paper's decaying alpha_k.
 """
 
 from repro.optim.optimizers import (Optimizer, adamw, clip_by_global_norm,
-                                    cosine_schedule, sgd)
+                                    cosine_schedule, flat_sgd, sgd)
 
-__all__ = ["Optimizer", "sgd", "adamw", "cosine_schedule",
+__all__ = ["Optimizer", "sgd", "flat_sgd", "adamw", "cosine_schedule",
            "clip_by_global_norm"]

@@ -44,6 +44,37 @@ def sgd(lr: float, momentum: float = 0.0,
     return Optimizer(init, update)
 
 
+def flat_sgd(lr: float, momentum: float = 0.0,
+             weight_decay: float = 0.0) -> Optimizer:
+    """SGD(+momentum) over a flat silo-parameter buffer.
+
+    Params and grads are single `(N, T)` arrays (the flat FL runtime's
+    packed layout, repro/fl/flat.py) — the update is one elementwise op
+    over one contiguous buffer instead of a pytree traversal, and is
+    numerically identical to `vmap(sgd().update)` over the silo axis.
+    The step counter is a shared scalar (identical across silos by
+    construction in DPASGD's synchronized rounds).
+    """
+
+    def init(w):
+        state = {"step": jnp.zeros((), jnp.int32)}
+        if momentum != 0.0:
+            state["mu"] = jnp.zeros_like(w)
+        return state
+
+    def update(w, g, state, lr_scale=1.0):
+        step = state["step"] + 1
+        lr_t = lr * lr_scale
+        if weight_decay:
+            g = g + weight_decay * w.astype(g.dtype)
+        if momentum == 0.0:
+            return w - (lr_t * g).astype(w.dtype), {"step": step}
+        mu = momentum * state["mu"] + g
+        return w - (lr_t * mu).astype(w.dtype), {"step": step, "mu": mu}
+
+    return Optimizer(init, update)
+
+
 def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
           weight_decay: float = 0.0) -> Optimizer:
     def init(params):

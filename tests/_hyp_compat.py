@@ -1,0 +1,84 @@
+"""Tiny fallback for `hypothesis` so property tests run everywhere.
+
+The container this repo targets does not ship hypothesis; the test
+modules use only a small slice of its API (`given`, `settings`,
+`strategies.integers`). When the real library is importable we re-export
+it untouched; otherwise `given` expands into a deterministic sample of
+examples drawn from each strategy's range (seeded, so failures
+reproduce), and `settings` honours `max_examples` as the sample size.
+
+Usage in test modules:
+
+    from _hyp_compat import given, settings, st
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis exists
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    import dataclasses
+    import functools
+    import inspect
+    import itertools
+
+    import numpy as np
+
+    @dataclasses.dataclass(frozen=True)
+    class _IntRange:
+        lo: int
+        hi: int  # inclusive, mirroring st.integers
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _IntRange:
+            return _IntRange(int(min_value), int(max_value))
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 20, **_ignored):
+        def deco(fn):
+            fn._hyp_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            inner = fn
+
+            @functools.wraps(inner)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_hyp_max_examples", 20)
+                rng = np.random.default_rng(0)
+                names = sorted(strategies)
+                # Always include the range corners for the first argument
+                # (cheap edge-case coverage), then random draws.
+                draws = []
+                first = strategies[names[0]]
+                for corner in {first.lo, first.hi}:
+                    ex = {names[0]: corner}
+                    for nm in names[1:]:
+                        s = strategies[nm]
+                        ex[nm] = int(rng.integers(s.lo, s.hi + 1))
+                    draws.append(ex)
+                for _ in range(max(n - len(draws), 0)):
+                    draws.append({nm: int(rng.integers(strategies[nm].lo,
+                                                       strategies[nm].hi + 1))
+                                  for nm in names})
+                for ex in itertools.islice(draws, n):
+                    inner(*args, **kwargs, **ex)
+
+            # settings() may be applied above or below @given; forward the
+            # attribute either way.
+            if hasattr(inner, "_hyp_max_examples"):
+                wrapper._hyp_max_examples = inner._hyp_max_examples
+            # All strategy parameters are supplied here — hide them from
+            # pytest's fixture resolution (hypothesis does the same).
+            wrapper.__signature__ = inspect.Signature()
+            if hasattr(wrapper, "__wrapped__"):
+                del wrapper.__wrapped__
+            return wrapper
+
+        return deco

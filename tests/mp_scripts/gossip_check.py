@@ -14,7 +14,10 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
-from jax import shard_map  # noqa: E402
+try:  # jax >= 0.5 exports it at top level
+    from jax import shard_map  # noqa: E402
+except ImportError:  # pragma: no cover - older jax
+    from jax.experimental.shard_map import shard_map  # noqa: E402
 
 from repro.core.consensus import metropolis_weights  # noqa: E402
 from repro.core.graph import make_graph  # noqa: E402
@@ -100,6 +103,30 @@ def main():
     np.testing.assert_allclose(np.asarray(got2["w"]), np.asarray(want2),
                                rtol=1e-5, atol=1e-6)
     print("ring-weak-ok")
+
+    # ---- use_kernel: flat-packed fused combine == jnp path ----
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=({"w": P("silo")},
+                  {"left": {"w": P("silo")}, "right": {"w": P("silo")}},
+                  None, None, None),
+        out_specs={"w": P("silo")},
+        check_rep=False)  # pallas_call has no replication rule
+    def ring_step_kernel(p, bufs, cs_, cl_, cr_):
+        local = {"w": p["w"][0]}
+        lb = {"w": bufs["left"]["w"][0]}
+        rb = {"w": bufs["right"]["w"][0]}
+        out, _ = gossip_ring_ppermute(
+            local, {"left": lb, "right": rb},
+            coeff_self=cs_, coeff_left=cl_, coeff_right=cr_,
+            axis="silo", active_left=True, active_right=True,
+            use_kernel=True)
+        return {"w": out["w"][None]}
+
+    got_k = ring_step_kernel(params, bufs, cs, cl, cr)["w"]
+    np.testing.assert_allclose(np.asarray(got_k), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+    print("ring-kernel-ok")
 
     # ---- HLO check: weak round must not contain collective-permute ----
     import jax._src.test_util as _  # noqa: F401

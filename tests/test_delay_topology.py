@@ -4,8 +4,7 @@ cycle-time simulator — including the paper's headline orderings."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp_compat import given, settings, st  # hypothesis or local fallback
 
 from repro.core import parsing
 from repro.core.consensus import metropolis_weights, state_consensus

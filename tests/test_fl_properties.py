@@ -14,8 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp_compat import given, settings, st  # hypothesis or local fallback
 
 from repro.core.delay import FEMNIST
 from repro.fl import dpasgd

@@ -6,8 +6,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp_compat import given, settings, st  # hypothesis or local fallback
 
 from repro.core import parsing
 from repro.core.delay import FEMNIST, Workload, graph_pair_delays

@@ -7,8 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hyp_compat import given, settings, st  # hypothesis or local fallback
 
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.flash_attention.kernel import flash_attention as fa_kernel
@@ -188,6 +187,26 @@ def test_gossip_combine_property(k, t, seed):
     # convexity: output within [min, max] envelope of inputs
     assert float(out.max()) <= float(w.max()) + 1e-5
     assert float(out.min()) >= float(w.min()) - 1e-5
+
+
+def test_gossip_combine_non_divisible_t_regression():
+    """Padding path: default block_t (65536) with T=65537 leaves a
+    1-column tail tile whose 65535 zero-filled columns must stay inert."""
+    ks = jax.random.split(KEY, 2)
+    w = jax.random.normal(ks[0], (3, 65537), jnp.float32)
+    a = jax.nn.softmax(jax.random.normal(ks[1], (3,)))
+    out = gossip_combine(w, a, interpret=True)
+    ref = gossip_combine_ref(w, a)
+    assert out.shape == (65537,)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_gossip_combine_empty_t():
+    """t == 0 must not divide the grid by a zero block."""
+    a = jnp.asarray([0.5, 0.5])
+    out = gossip_combine(jnp.zeros((2, 0)), a, interpret=True)
+    assert out.shape == (0,)
 
 
 def test_combine_pytree_matches_tree_sum():
