@@ -50,13 +50,14 @@ def main() -> None:
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (ablation_noniid, fig5_convergence, kernel_bench,
-                            table1_cycle_time, table3_isolated,
+                            sim_bench, table1_cycle_time, table3_isolated,
                             table4_removal, table5_accuracy,
                             table6_tradeoff)
 
     suites = {
         "table1": lambda: table1_cycle_time.run(quick=args.quick),
         "table3": lambda: table3_isolated.run(quick=args.quick),
+        "sim": lambda: sim_bench.run(quick=args.quick),
         "table4": lambda: table4_removal.run(
             num_rounds=args.rounds or (40 if args.quick else 120),
             quick=args.quick),

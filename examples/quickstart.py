@@ -30,11 +30,17 @@ def main():
     print(f"parsed into {len(states)} states; "
           f"{sum(s.has_isolated() for s in states)} contain isolated nodes")
 
-    # 4. cycle time per round (Eq. 4/5)
+    # 4. cycle time per round (Eq. 4/5) — the vectorized TimingPlan is
+    # what the simulator/trainer/sweep use; the dict tracker is its
+    # bit-for-bit equivalence oracle.
+    from repro.core.timing import multigraph_timing_plan
+    plan = multigraph_timing_plan(net, FEMNIST, t=5, overlay=overlay)
+    taus = plan.cycle_times(12)
     tracker = MultigraphDelayTracker(net=net, wl=FEMNIST, overlay=overlay)
     print("\nround | isolated nodes | cycle time (ms)")
     for k, st in parsing.state_schedule(states, 12):
         tau = tracker.round_cycle_time(st)
+        assert tau == taus[k], "vectorized engine must match the oracle"
         print(f"{k:5d} | {str(st.isolated_nodes()):>14s} | {tau:8.2f}")
 
     # 5. the headline: average cycle time vs every baseline topology

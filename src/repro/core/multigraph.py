@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.delay import Workload, graph_pair_delays
+from repro.core.delay import Workload
 from repro.core.graph import Multigraph, Pair, SimpleGraph
 from repro.networks.zoo import NetworkSpec
 
@@ -23,14 +23,19 @@ from repro.networks.zoo import NetworkSpec
 def build_multigraph(net: NetworkSpec, wl: Workload, overlay: SimpleGraph,
                      t: int = 5) -> Multigraph:
     """Algorithm 1. ``t`` is the paper's max-edges-per-pair knob (t=5 default)."""
+    from repro.core.timing import pair_delay_vector
+
     if t < 1:
         raise ValueError(f"t must be >= 1, got {t}")
-    delays = graph_pair_delays(net, wl, overlay)
-    if not delays:
+    if not overlay.pairs:
         raise ValueError("overlay has no edges")
-    d_min = min(delays.values())
+    pair_i = np.fromiter((p[0] for p in overlay.pairs), np.int64)
+    pair_j = np.fromiter((p[1] for p in overlay.pairs), np.int64)
+    # Array-form Eq. 3 (bitwise equal to delay.pair_delay_ms per pair).
+    d = pair_delay_vector(net, wl, pair_i, pair_j, overlay.degrees())
+    d_min = d.min()
     mult: dict[Pair, int] = {}
-    for p, d in delays.items():
-        n = int(min(t, int(np.round(d / d_min))))
+    for p, dp in zip(overlay.pairs, d):
+        n = int(min(t, int(np.round(dp / d_min))))
         mult[p] = max(1, n)
     return Multigraph(num_nodes=overlay.num_nodes, multiplicity=mult)

@@ -27,17 +27,49 @@ def max_states(mg: Multigraph) -> int:
     return s
 
 
+def capped_multiplicities(mult: dict[Pair, int],
+                          cap_states: int | None) -> dict[Pair, int]:
+    """Clamp multiplicities so their LCM stays within ``cap_states``.
+
+    Capping the *state list* mid-LCM (the old behaviour) desynchronized
+    every pair whose multiplicity does not divide the cap: cycling the
+    truncated prefix restarts the countdown at the wrap, so a pair with
+    n=7 under cap=120 goes strong at rounds 0, 7, ..., 119, 120(!),
+    127, ... instead of every 7th round, and the wrapped state 0 is an
+    all-strong overlay that Algorithm 2's schedule never contains.
+    Clamping multiplicities instead keeps the materialized schedule
+    genuinely cyclic: the largest clamp ``m_max`` with
+    ``lcm(min(n, m_max)) <= cap_states`` is applied uniformly.
+    """
+    if cap_states is None:
+        return dict(mult)
+    if cap_states < 1:
+        raise ValueError(f"cap_states must be >= 1, got {cap_states}")
+    m_max = max(mult.values(), default=1)
+
+    def lcm_clamped(clamp: int) -> int:
+        s = 1
+        for n in mult.values():
+            s = math.lcm(s, min(n, clamp))
+        return s
+
+    while m_max > 1 and lcm_clamped(m_max) > cap_states:
+        m_max -= 1
+    return {p: min(n, m_max) for p, n in mult.items()}
+
+
 def parse_multigraph(mg: Multigraph, cap_states: int | None = None) -> list[MultigraphState]:
     """Algorithm 2: unroll the multigraph into its cyclic list of states.
 
-    ``cap_states`` optionally truncates pathological LCMs (the schedule is
-    cyclic, so training just cycles whatever prefix we materialize; the
-    paper's networks give small LCMs — Table 3 reports 6..60 states).
+    ``cap_states`` bounds pathological LCMs by clamping multiplicities
+    BEFORE the LCM (`capped_multiplicities`), so the materialized list
+    is always one whole period and cycling it is exact. The paper's
+    networks give small LCMs anyway — Table 3 reports 6..60 states.
     """
-    s_max = max_states(mg)
-    if cap_states is not None:
-        s_max = min(s_max, cap_states)
-    L = dict(mg.multiplicity)
+    L = capped_multiplicities(mg.multiplicity, cap_states)
+    s_max = 1
+    for n in L.values():
+        s_max = math.lcm(s_max, n)
     Lbar: dict[Pair, int] = dict(L)
     states: list[MultigraphState] = []
     for _ in range(s_max):

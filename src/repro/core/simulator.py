@@ -5,126 +5,51 @@ run of `num_rounds` communication rounds:
 
 * static topologies — every round costs the same Eq. 5 max-delay;
 * MATCHA — per-round sampled matchings, averaged;
-* multigraph — Algorithm 1 + Algorithm 2 + the Eq. 4 delay evolution via
-  MultigraphDelayTracker; reports isolated-node statistics used by the
-  paper's Table 3.
+* multigraph — Algorithm 1 + Algorithm 2 + the Eq. 4 delay evolution,
+  now via the vectorized timing engine (`core/timing.py`); reports
+  isolated-node statistics used by the paper's Table 3.
 
 This mirrors the simulator of Marfoq et al. [58] that the paper itself
 uses ("we take advantage of the network simulator and the timing
-simulator as in Marfoq et al.").
+simulator as in Marfoq et al."). Every `simulate_*` entry is a thin
+wrapper over a `timing.TimingPlan` — the same object the FL trainer's
+wall-clock axis comes from — so reports and training curves can never
+disagree. The dict-based `delay.MultigraphDelayTracker` remains the
+equivalence oracle (tests/test_timing.py).
 """
 
 from __future__ import annotations
 
-import dataclasses
-
-import numpy as np
-
-from repro.core import parsing
-from repro.core.delay import (MultigraphDelayTracker, Workload,
-                              static_cycle_time_ms)
-from repro.core.graph import MultigraphState, SimpleGraph
-from repro.core.multigraph import build_multigraph
-from repro.core.topology import TopologyDesign, build_topology, ring_topology
+from repro.core import timing
+from repro.core.delay import Workload
+from repro.core.graph import SimpleGraph
+from repro.core.timing import CycleTimeReport  # noqa: F401  (re-export)
+from repro.core.topology import TopologyDesign
 from repro.networks.zoo import NetworkSpec
 
 DEFAULT_ROUNDS = 6400  # the paper trains 6,400 communication rounds
 
 
-@dataclasses.dataclass(frozen=True)
-class CycleTimeReport:
-    topology: str
-    network: str
-    workload: str
-    num_rounds: int
-    mean_cycle_ms: float
-    total_time_s: float
-    # Multigraph-only statistics (paper Table 3); zero for baselines.
-    num_states: int = 1
-    states_with_isolated: int = 0
-    rounds_with_isolated: int = 0
-    mean_isolated_per_round: float = 0.0
-
-    def row(self) -> dict:
-        return dataclasses.asdict(self)
-
-
 def simulate_static(name: str, net: NetworkSpec, wl: Workload,
                     design: TopologyDesign,
                     num_rounds: int = DEFAULT_ROUNDS) -> CycleTimeReport:
-    ct = static_cycle_time_ms(net, wl, design.round_graph(0))
-    return CycleTimeReport(
-        topology=name, network=net.name, workload=wl.name,
-        num_rounds=num_rounds, mean_cycle_ms=ct,
-        total_time_s=ct * num_rounds / 1000.0)
+    plan = timing.static_timing_plan(name, net, wl, design.round_graph(0))
+    return plan.report(num_rounds)
 
 
 def simulate_star(net: NetworkSpec, wl: Workload,
                   num_rounds: int = DEFAULT_ROUNDS) -> CycleTimeReport:
-    """STAR is client-server FedAvg: a round is gather THEN broadcast.
-
-    The hub's access link is shared across all N-1 concurrent transfers
-    in each phase, and the two phases are sequential — this is why STAR
-    is the slowest design in the paper's Table 1.
-    """
-    from repro.core.delay import directed_delay_ms
-
-    n = net.num_silos
-    best = np.inf
-    for hub in range(n):
-        up = max(directed_delay_ms(net, wl, i, hub, 1, n - 1)
-                 for i in range(n) if i != hub)
-        down = max(directed_delay_ms(net, wl, hub, i, n - 1, 1)
-                   for i in range(n) if i != hub)
-        # The hub's own compute is inside `up` of its clients; subtract
-        # nothing — gather + broadcast are sequential phases.
-        best = min(best, up + down)
-    return CycleTimeReport(
-        topology="star", network=net.name, workload=wl.name,
-        num_rounds=num_rounds, mean_cycle_ms=float(best),
-        total_time_s=float(best) * num_rounds / 1000.0)
+    """STAR (client-server FedAvg): sequential gather + broadcast phases
+    through the best hub — see `timing.star_timing_plan`."""
+    return timing.star_timing_plan(net, wl).report(num_rounds)
 
 
 def simulate_ring(net: NetworkSpec, wl: Workload,
                   num_rounds: int = DEFAULT_ROUNDS) -> CycleTimeReport:
-    """RING [58] with its max-plus throughput semantics.
-
-    Marfoq et al.'s ring pipelines across rounds: by max-plus spectral
-    theory the asymptotic cycle time is the maximum cycle mean over the
-    circuits of the communication event graph. For the Christofides ring
-    those circuits are (a) each node's local-compute self-loop (mean
-    u*T_c), (b) the full ring circuit (mean = sum of directed edge
-    delays / N), and (c) for the bidirectional consensus exchange each
-    pair's 2-circuit i->j->i, whose mean is d_pair/2 because uploads and
-    downloads run in parallel (paper §3.3). This pipelining is exactly
-    why RING beats tree/star designs in Table 1 and is the state of the
-    art the multigraph improves on.
-    """
-    from repro.core.delay import directed_delay_ms, pair_delay_ms
-
-    design = ring_topology(net, wl)
-    graph = design.round_graph(0)
-    # Orient the cycle: follow neighbors starting from node 0.
-    adj = {v: graph.neighbors(v) for v in range(graph.num_nodes)}
-    tour = [0]
-    prev = None
-    while len(tour) < graph.num_nodes:
-        nxts = [v for v in adj[tour[-1]] if v != prev]
-        prev = tour[-1]
-        tour.append(nxts[0])
-    tour.append(0)
-    total = 0.0
-    for a, b in zip(tour[:-1], tour[1:]):
-        total += directed_delay_ms(net, wl, a, b, 1, 1)  # out/in degree 1
-    deg = graph.degrees()
-    two_circuit = max(pair_delay_ms(net, wl, i, j, deg) / 2.0
-                      for i, j in graph.pairs)
-    comp = wl.compute_ms(net)
-    lam = max(float(total) / graph.num_nodes, two_circuit, float(np.max(comp)))
-    return CycleTimeReport(
-        topology="ring", network=net.name, workload=wl.name,
-        num_rounds=num_rounds, mean_cycle_ms=lam,
-        total_time_s=lam * num_rounds / 1000.0)
+    """RING [58] with max-plus throughput semantics — see
+    `timing.ring_timing_plan` (handles 2-silo rings and verifies the
+    tour is a single closed Hamiltonian cycle)."""
+    return timing.ring_timing_plan(net, wl).report(num_rounds)
 
 
 def simulate_sampled(name: str, net: NetworkSpec, wl: Workload,
@@ -133,58 +58,28 @@ def simulate_sampled(name: str, net: NetworkSpec, wl: Workload,
                      sample_rounds: int | None = None) -> CycleTimeReport:
     """Per-round random topologies (MATCHA): average sampled cycle times."""
     s = sample_rounds if sample_rounds is not None else min(num_rounds, 512)
-    times = [static_cycle_time_ms(net, wl, design.round_graph(k)) for k in range(s)]
-    mean_ct = float(np.mean(times))
-    return CycleTimeReport(
-        topology=name, network=net.name, workload=wl.name,
-        num_rounds=num_rounds, mean_cycle_ms=mean_ct,
-        total_time_s=mean_ct * num_rounds / 1000.0)
+    plan = timing.sampled_timing_plan(name, net, wl, design,
+                                     sample_rounds=s)
+    return plan.report(num_rounds)
 
 
 def simulate_multigraph(net: NetworkSpec, wl: Workload,
                         t: int = 5,
                         num_rounds: int = DEFAULT_ROUNDS,
                         overlay: SimpleGraph | None = None,
-                        cap_states: int | None = 360) -> CycleTimeReport:
+                        cap_states: int | None = timing.CAP_STATES) -> CycleTimeReport:
     """Full multigraph pipeline: overlay -> Algorithm 1 -> Algorithm 2 -> Eq. 4/5."""
-    if overlay is None:
-        overlay = ring_topology(net, wl).graph
-    mg = build_multigraph(net, wl, overlay, t=t)
-    states = parsing.parse_multigraph(mg, cap_states=cap_states)
-    tracker = MultigraphDelayTracker(net=net, wl=wl, overlay=overlay)
-
-    taus = []
-    rounds_iso = 0
-    iso_counts = []
-    for k, state in parsing.state_schedule(states, num_rounds):
-        tau = tracker.round_cycle_time(state)
-        taus.append(tau)
-        iso = state.isolated_nodes()
-        if iso:
-            rounds_iso += 1
-        iso_counts.append(len(iso))
-
-    mean_ct = float(np.mean(taus))
-    return CycleTimeReport(
-        topology=f"multigraph(t={t})", network=net.name, workload=wl.name,
-        num_rounds=num_rounds, mean_cycle_ms=mean_ct,
-        total_time_s=float(np.sum(taus)) / 1000.0,
-        num_states=len(states),
-        states_with_isolated=sum(1 for s in states if s.has_isolated()),
-        rounds_with_isolated=rounds_iso,
-        mean_isolated_per_round=float(np.mean(iso_counts)))
+    plan = timing.multigraph_timing_plan(net, wl, t=t, overlay=overlay,
+                                        cap_states=cap_states)
+    return plan.report(num_rounds)
 
 
 def simulate(topology: str, net: NetworkSpec, wl: Workload,
              num_rounds: int = DEFAULT_ROUNDS, **kw) -> CycleTimeReport:
-    """Uniform entry point for every topology in the paper's Table 1."""
-    if topology == "multigraph":
-        return simulate_multigraph(net, wl, num_rounds=num_rounds, **kw)
-    if topology == "star":
-        return simulate_star(net, wl, num_rounds)
-    if topology == "ring":
-        return simulate_ring(net, wl, num_rounds)
-    design = build_topology(topology, net, wl, **kw)
-    if topology in ("matcha", "matcha_plus"):
-        return simulate_sampled(topology, net, wl, design, num_rounds)
-    return simulate_static(topology, net, wl, design, num_rounds)
+    """Uniform entry point for every topology in the paper's Table 1.
+
+    Delegates to `timing.make_timing_plan` — the one dispatch table —
+    so this module never re-implements the topology branching."""
+    if topology.startswith("matcha"):
+        kw.setdefault("sample_rounds", min(num_rounds, 512))
+    return timing.make_timing_plan(topology, net, wl, **kw).report(num_rounds)

@@ -1,0 +1,195 @@
+"""Sweep driver: batch-evaluate (topology x network x workload x t)
+grids on the vectorized timing engine and emit the paper's Table 1
+(total training time per cell) and Table 3 (states / isolated-node
+statistics) as ONE command:
+
+    python -m repro.core.sweep                  # full paper grid
+    python -m repro.core.sweep --quick          # CI-sized subset
+    python -m repro.core.sweep --networks gaia,geant --t 3,5 \
+        --topologies ring,multigraph --json sweep.json
+
+Every cell is a `timing.TimingPlan` (`core/timing.py`) — the same
+object the simulator and the FL trainer consume — so the tables are
+single-sourced with the training wall-clock axis. Expensive per-(net,
+workload) artifacts (the Christofides ring overlay) are built once and
+shared between the RING baseline and the multigraph cells.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+from repro.core import timing
+from repro.core.delay import WORKLOADS
+from repro.core.timing import CycleTimeReport
+from repro.core.topology import ring_topology
+from repro.networks.zoo import NETWORKS, get_network
+
+PAPER_TOPOLOGIES = ("star", "matcha", "matcha_plus", "mst", "dmbst",
+                    "ring", "multigraph")
+PAPER_NETWORKS = ("gaia", "amazon", "geant", "exodus", "ebone")
+PAPER_WORKLOADS = ("femnist", "sentiment140", "inaturalist")
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepConfig:
+    topologies: tuple[str, ...] = PAPER_TOPOLOGIES
+    networks: tuple[str, ...] = PAPER_NETWORKS
+    workloads: tuple[str, ...] = PAPER_WORKLOADS
+    t_values: tuple[int, ...] = (5,)
+    num_rounds: int = 6400
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepCell:
+    """One grid cell: the report plus how long it took to evaluate."""
+
+    report: CycleTimeReport
+    t: int | None           # multigraph t, None for baselines
+    num_silos: int
+    eval_ms: float
+
+    def row(self) -> dict:
+        d = self.report.row()
+        d.update(t=self.t, num_silos=self.num_silos,
+                 eval_ms=round(self.eval_ms, 3))
+        return d
+
+
+def run_sweep(cfg: SweepConfig) -> list[SweepCell]:
+    """Evaluate the whole grid; one TimingPlan per cell."""
+    cells: list[SweepCell] = []
+    for net_name in cfg.networks:
+        net = get_network(net_name)
+        for wl_name in cfg.workloads:
+            wl = WORKLOADS[wl_name]
+            # Christofides overlay shared by ring + every multigraph t.
+            overlay = (ring_topology(net, wl).graph
+                       if ("ring" in cfg.topologies
+                           or "multigraph" in cfg.topologies) else None)
+            for topo in cfg.topologies:
+                ts: tuple[int | None, ...] = (
+                    cfg.t_values if topo == "multigraph" else (None,))
+                for t in ts:
+                    t0 = time.perf_counter()
+                    plan = timing.make_timing_plan(
+                        topo, net, wl, t=(t if t is not None else 5),
+                        seed=cfg.seed,
+                        sample_rounds=min(cfg.num_rounds, 512),
+                        overlay=(overlay if topo in ("ring", "multigraph")
+                                 else None))
+                    rep = plan.report(cfg.num_rounds)
+                    cells.append(SweepCell(
+                        report=rep, t=t, num_silos=net.num_silos,
+                        eval_ms=(time.perf_counter() - t0) * 1e3))
+    return cells
+
+
+# ---------------------------------------------------------------------------
+# table formatting
+# ---------------------------------------------------------------------------
+
+
+def _cell_key(c: SweepCell) -> tuple[str, str]:
+    return (c.report.workload, c.report.network)
+
+
+def format_table1(cells: list[SweepCell]) -> str:
+    """Paper Table 1: total training time (seconds) per topology x
+    network, one block per workload; multigraph rows are per-t."""
+    lines = ["== Table 1: total training time (seconds, "
+             f"{cells[0].report.num_rounds if cells else 0} rounds) =="]
+    workloads = sorted({c.report.workload for c in cells})
+    networks = list(dict.fromkeys(c.report.network for c in cells))
+    rows = list(dict.fromkeys(
+        (c.report.topology, c.t) for c in cells))
+    for wl in workloads:
+        lines.append(f"-- {wl} --")
+        lines.append("topology".ljust(18) + "".join(
+            n.rjust(12) for n in networks))
+        for topo, t in rows:
+            vals = []
+            for n in networks:
+                match = [c for c in cells
+                         if _cell_key(c) == (wl, n)
+                         and (c.report.topology, c.t) == (topo, t)]
+                vals.append(f"{match[0].report.total_time_s:.1f}"
+                            if match else "-")
+            lines.append(topo.ljust(18) + "".join(v.rjust(12) for v in vals))
+    return "\n".join(lines)
+
+
+def format_table3(cells: list[SweepCell]) -> str:
+    """Paper Table 3: multigraph isolated-node statistics per network
+    (+ cycle time vs RING when a ring cell is in the sweep)."""
+    lines = ["== Table 3: multigraph states / isolated nodes =="]
+    header = ("network".ljust(9) + "workload".ljust(14) + "t".rjust(3)
+              + "silos".rjust(7) + "states".rjust(8) + "iso_states".rjust(12)
+              + "iso_rounds".rjust(12) + "cycle_ms".rjust(10)
+              + "ring_ms".rjust(10))
+    lines.append(header)
+    for c in cells:
+        if not c.report.topology.startswith("multigraph"):
+            continue
+        ring = [r for r in cells
+                if _cell_key(r) == _cell_key(c) and r.report.topology == "ring"]
+        ring_ms = f"{ring[0].report.mean_cycle_ms:.1f}" if ring else "-"
+        r = c.report
+        lines.append(
+            c.report.network.ljust(9) + r.workload.ljust(14)
+            + str(c.t).rjust(3) + str(c.num_silos).rjust(7)
+            + str(r.num_states).rjust(8)
+            + f"{r.states_with_isolated}/{r.num_states}".rjust(12)
+            + f"{r.rounds_with_isolated}/{r.num_rounds}".rjust(12)
+            + f"{r.mean_cycle_ms:.1f}".rjust(10) + ring_ms.rjust(10))
+    return "\n".join(lines)
+
+
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(
+        description="Batch cycle-time sweep: paper Tables 1 and 3 in one "
+                    "command (vectorized Eq. 3/4/5 engine).")
+    ap.add_argument("--topologies", default=",".join(PAPER_TOPOLOGIES))
+    ap.add_argument("--networks", default=",".join(PAPER_NETWORKS))
+    ap.add_argument("--workloads", default=",".join(PAPER_WORKLOADS))
+    ap.add_argument("--t", default="5",
+                    help="comma-separated multigraph t values")
+    ap.add_argument("--rounds", type=int, default=6400)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized subset (gaia+geant, femnist, no MATCHA)")
+    ap.add_argument("--json", default="",
+                    help="also dump all cells as JSON to this path")
+    args = ap.parse_args(argv)
+
+    cfg = SweepConfig(
+        topologies=tuple(s for s in args.topologies.split(",") if s),
+        networks=tuple(s for s in args.networks.split(",") if s),
+        workloads=tuple(s for s in args.workloads.split(",") if s),
+        t_values=tuple(int(s) for s in args.t.split(",") if s),
+        num_rounds=args.rounds)
+    if args.quick:
+        cfg = dataclasses.replace(
+            cfg, networks=("gaia", "geant"), workloads=("femnist",),
+            topologies=tuple(t for t in cfg.topologies
+                             if not t.startswith("matcha")))
+
+    t0 = time.perf_counter()
+    cells = run_sweep(cfg)
+    wall = time.perf_counter() - t0
+    print(format_table1(cells))
+    print()
+    print(format_table3(cells))
+    print(f"\n{len(cells)} cells in {wall:.2f}s "
+          f"(sum of per-cell evals {sum(c.eval_ms for c in cells) / 1e3:.2f}s)")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([c.row() for c in cells], f, indent=1)
+        print(f"wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -30,11 +30,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import parsing
+from repro.core import timing
 from repro.core.consensus import metropolis_weights
 from repro.core.graph import MultigraphState, SimpleGraph
-from repro.core.multigraph import build_multigraph
-from repro.core.topology import build_topology, ring_topology
+from repro.core.topology import build_topology
 from repro.core.delay import Workload
 from repro.networks.zoo import NetworkSpec
 
@@ -71,14 +70,20 @@ def _directed_edges(graph: SimpleGraph):
 
 
 def multigraph_plan(net: NetworkSpec, wl: Workload, t: int = 5,
-                    cap_states: int | None = 120) -> tuple[RoundPlan, list[MultigraphState], SimpleGraph]:
+                    cap_states: int | None = timing.CAP_STATES,
+                    tplan: timing.TimingPlan | None = None) -> tuple[RoundPlan, list[MultigraphState], SimpleGraph]:
     """Plan for the paper's multigraph: overlay MH weights, per-state
 
     strong masks (weak edges keep their coefficient but read stale
-    buffers)."""
-    overlay = ring_topology(net, wl).graph
-    mg = build_multigraph(net, wl, overlay, t=t)
-    states = parsing.parse_multigraph(mg, cap_states=cap_states)
+    buffers). States and overlay come from the SAME TimingPlan the
+    wall-clock axis is simulated with (single source of truth for
+    states, caps, and schedules — the trainer used to re-derive them
+    with a different ``cap_states``)."""
+    if tplan is None:
+        tplan = timing.multigraph_timing_plan(net, wl, t=t,
+                                              cap_states=cap_states)
+    overlay = tplan.overlay
+    states = list(tplan.states)
     src, dst = _directed_edges(overlay)
     a = metropolis_weights(overlay)
     r = len(states)
@@ -113,10 +118,13 @@ def static_plan(graph: SimpleGraph) -> RoundPlan:
         aggregate=np.ones((1,), bool))
 
 
-def matcha_plan(design, num_nodes: int, rounds: int) -> RoundPlan:
+def matcha_plan(design, num_nodes: int, rounds: int,
+                graphs: list[SimpleGraph] | None = None) -> RoundPlan:
     """Per-round sampled matchings: coefficients are MH of the ACTIVE
 
-    graph that round; inactive edges get coefficient 0."""
+    graph that round; inactive edges get coefficient 0. ``graphs``
+    optionally supplies the pre-materialized per-round graphs (shared
+    with the TimingPlan so both axes sample the same sequence)."""
     base_pairs = sorted({p for m in design.matchings for p in m})
     base = SimpleGraph(num_nodes=num_nodes, pairs=tuple(base_pairs))
     src, dst = _directed_edges(base)
@@ -126,7 +134,7 @@ def matcha_plan(design, num_nodes: int, rounds: int) -> RoundPlan:
     diag = np.ones((rounds, num_nodes), np.float32)
     pair_index = {p: ei for ei, p in enumerate(base.pairs)}
     for k in range(rounds):
-        g = design.round_graph(k)
+        g = graphs[k] if graphs is not None else design.round_graph(k)
         if not g.pairs:
             continue
         a = metropolis_weights(g)
@@ -142,16 +150,39 @@ def matcha_plan(design, num_nodes: int, rounds: int) -> RoundPlan:
 
 
 def make_round_schedule(topology: str, net: NetworkSpec, wl: Workload, *,
-                        t: int = 5, rounds: int = 1, seed: int = 0):
-    """RoundPlan for any topology in the paper's Table 1."""
+                        t: int = 5, rounds: int = 1, seed: int = 0
+                        ) -> tuple[RoundPlan, timing.TimingPlan]:
+    """(RoundPlan, TimingPlan) for any topology in the paper's Table 1.
+
+    The two plans are built from one schedule: for the multigraph the
+    RoundPlan's per-state strong masks come from the TimingPlan's own
+    parsed states, so `run_fl` totals and `simulate(...)` reports agree
+    for the same config by construction.
+    """
     if topology == "multigraph":
-        plan, _, _ = multigraph_plan(net, wl, t=t)
-        return plan
+        tplan = timing.multigraph_timing_plan(net, wl, t=t)
+        plan, _, _ = multigraph_plan(net, wl, t=t, tplan=tplan)
+        return plan, tplan
+    if topology == "star":
+        design = build_topology("star", net, wl)
+        return (static_plan(design.round_graph(0)),
+                timing.star_timing_plan(net, wl))
     design = build_topology(topology, net, wl, **(
         {"seed": seed} if topology.startswith("matcha") else {}))
     if topology.startswith("matcha"):
-        return matcha_plan(design, net.num_silos, rounds)
-    return static_plan(design.round_graph(0))
+        # One design, one materialized graph sequence: the RoundPlan
+        # trains on graphs[k] and the TimingPlan times the SAME list
+        # (every round, no tiling), so the two axes cannot
+        # desynchronize.
+        graphs = [design.round_graph(k) for k in range(max(rounds, 1))]
+        tplan = timing.sampled_timing_plan(topology, net, wl, design,
+                                           graphs=graphs)
+        return matcha_plan(design, net.num_silos, rounds,
+                           graphs=graphs), tplan
+    g = design.round_graph(0)
+    if topology == "ring":
+        return static_plan(g), timing.ring_timing_plan(net, wl, graph=g)
+    return static_plan(g), timing.static_timing_plan(topology, net, wl, g)
 
 
 # ---------------------------------------------------------------------------

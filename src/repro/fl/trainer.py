@@ -27,10 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import parsing
-from repro.core.delay import WORKLOADS, MultigraphDelayTracker, Workload, static_cycle_time_ms
-from repro.core.simulator import simulate
-from repro.core.topology import build_topology, ring_topology
+from repro.core.delay import WORKLOADS, Workload
+from repro.core.topology import ring_topology
 from repro.data.synthetic import FederatedDataset, make_federated_dataset
 from repro.fl import dpasgd
 from repro.models.small import SMALL_MODELS, SmallModelSpec
@@ -111,20 +109,6 @@ def _removed_network(net: NetworkSpec, wl: Workload, k: int,
                        latency_ms=lat), keep
 
 
-def _cycle_times(cfg: FLConfig, net: NetworkSpec, wl: Workload,
-                 rounds: int) -> list[float]:
-    if cfg.topology == "multigraph":
-        from repro.core.multigraph import build_multigraph
-        overlay = ring_topology(net, wl).graph
-        mg = build_multigraph(net, wl, overlay, t=cfg.t)
-        states = parsing.parse_multigraph(mg, cap_states=120)
-        tracker = MultigraphDelayTracker(net=net, wl=wl, overlay=overlay)
-        return [tracker.round_cycle_time(s)
-                for _, s in parsing.state_schedule(states, rounds)]
-    rep = simulate(cfg.topology, net, wl, num_rounds=rounds)
-    return [rep.mean_cycle_ms] * rounds
-
-
 def _sample_round(data, n: int, cfg: FLConfig, rng) -> tuple[np.ndarray,
                                                              np.ndarray]:
     """One round of micro batches, (u, N, b, ...) — the draw ORDER is
@@ -152,8 +136,10 @@ def run_fl(cfg: FLConfig) -> FLResult:
                                   samples_per_silo=cfg.samples_per_silo,
                                   alpha=cfg.alpha, seed=cfg.seed)
 
-    plan = dpasgd.make_round_schedule(cfg.topology, net, wl, t=cfg.t,
-                                      rounds=cfg.rounds, seed=cfg.seed)
+    # One schedule, two views: the RoundPlan drives training, the
+    # TimingPlan it was built from drives the wall-clock axis.
+    plan, tplan = dpasgd.make_round_schedule(cfg.topology, net, wl, t=cfg.t,
+                                             rounds=cfg.rounds, seed=cfg.seed)
     key = jax.random.PRNGKey(cfg.seed)
     loss_fn = lambda p, b: spec.loss(p, b)
     test_batch = {"x": jnp.asarray(data.test_x),
@@ -223,7 +209,7 @@ def run_fl(cfg: FLConfig) -> FLResult:
     else:
         raise ValueError(f"unknown runtime {cfg.runtime!r}")
 
-    cycle = _cycle_times(cfg, net, wl, cfg.rounds)
+    cycle = tplan.cycle_times(cfg.rounds).tolist()
     return FLResult(config=cfg, round_losses=round_losses,
                     eval_rounds=eval_rounds, eval_accs=eval_accs,
                     cycle_times_ms=cycle,

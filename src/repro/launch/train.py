@@ -68,8 +68,8 @@ def run_reduced_fl(cfg: TrainConfig) -> dict:
     n = net.num_silos
     wl = WORKLOADS["femnist"]
 
-    plan = dpasgd.make_round_schedule(cfg.topology, net, wl, t=cfg.t,
-                                      rounds=cfg.rounds, seed=cfg.seed)
+    plan, _ = dpasgd.make_round_schedule(cfg.topology, net, wl, t=cfg.t,
+                                         rounds=cfg.rounds, seed=cfg.seed)
     opt = sgd(cfg.lr, momentum=0.9)
     key = jax.random.PRNGKey(cfg.seed)
     state = dpasgd.init_fl_state(lambda k: tf.init_params(mcfg, k), opt, n,

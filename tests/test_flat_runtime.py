@@ -292,6 +292,7 @@ def test_flat_sgd_matches_vmapped_sgd():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 def test_trainer_flat_matches_legacy():
     from repro.fl.trainer import FLConfig, run_fl
     base = dict(dataset="femnist", network="gaia", topology="multigraph",
@@ -302,3 +303,23 @@ def test_trainer_flat_matches_legacy():
     assert flat.round_losses == legacy.round_losses
     assert flat.eval_rounds == legacy.eval_rounds
     assert flat.eval_accs == legacy.eval_accs
+
+
+@pytest.mark.slow
+def test_trainer_flat_matches_legacy_momentum():
+    """momentum>0 end-to-end cycle equivalence (flat_sgd vs sgd): the
+    momentum path is allowed a few ulp per round (XLA FMA-fuses
+    `momentum*mu + g` differently for packed vs per-leaf layouts), so
+    the curves match to tight tolerance rather than bit-for-bit."""
+    from repro.fl.trainer import FLConfig, run_fl
+    base = dict(dataset="femnist", network="gaia", topology="multigraph",
+                rounds=4, eval_every=2, samples_per_silo=16, batch_size=4,
+                lr=0.05, momentum=0.9, seed=5)
+    flat = run_fl(FLConfig(runtime="flat", **base))
+    legacy = run_fl(FLConfig(runtime="legacy", **base))
+    np.testing.assert_allclose(flat.round_losses, legacy.round_losses,
+                               rtol=1e-5, atol=1e-7)
+    assert flat.eval_rounds == legacy.eval_rounds
+    np.testing.assert_allclose(flat.eval_accs, legacy.eval_accs, atol=1e-3)
+    # both runtimes share the same TimingPlan wall-clock axis exactly
+    assert flat.cycle_times_ms == legacy.cycle_times_ms

@@ -28,6 +28,7 @@ def test_headline_cycle_time_reduction():
                 (netname, baseline)
 
 
+@pytest.mark.slow
 def test_headline_accuracy_preserved():
     """Claim 2 (Tables 4/5 + Fig. 5): at EQUAL WALL-CLOCK the multigraph
 
@@ -50,6 +51,7 @@ def test_headline_accuracy_preserved():
     assert removed.mean_cycle_ms < ring.mean_cycle_ms
 
 
+@pytest.mark.slow
 def test_llm_fl_end_to_end():
     """Deliverable (b): the FL runtime drives the assigned-architecture
 
