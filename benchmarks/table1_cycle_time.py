@@ -1,16 +1,22 @@
 """Paper Table 1: cycle time (ms) per topology x network x dataset.
 
-Reproduces the wall-clock table with the Eq. 3/4/5 simulator over 6,400
-communication rounds (the paper's setting) — pure simulation, fast.
+Reproduces the wall-clock table over 6,400 communication rounds (the
+paper's setting) by consuming `core/sweep.py`'s batched TimingGrid path
+— the SAME evaluation the sweep CLI and the FL trainer share — instead
+of looping `simulate` per cell (the old duplicated Table 1 path). Each
+run cross-checks one cell per (workload, network) block against the
+one-off `simulate` entry point, so this table can never drift from the
+sweep or the simulator.
 """
 
 from __future__ import annotations
 
 import time
 
+from repro.core import sweep as sweepmod
 from repro.core.delay import WORKLOADS
 from repro.core.simulator import simulate
-from repro.networks.zoo import NETWORKS
+from repro.networks.zoo import NETWORKS, get_network
 
 TOPOLOGIES = ["star", "matcha", "matcha_plus", "mst", "dmbst", "ring",
               "multigraph"]
@@ -33,23 +39,39 @@ def run(num_rounds: int = 6400, quick: bool = False):
     """Yields CSV rows: name,us_per_call,derived."""
     workloads = ["femnist"] if quick else list(WORKLOADS)
     networks = ["gaia", "geant"] if quick else list(NETWORKS)
+    cfg = sweepmod.SweepConfig(topologies=tuple(TOPOLOGIES),
+                               networks=tuple(networks),
+                               workloads=tuple(workloads),
+                               num_rounds=num_rounds)
+    t0 = time.perf_counter()
+    cells = sweepmod.run_sweep(cfg)
+    sweep_us = (time.perf_counter() - t0) * 1e6
+    by_key = {(c.report.workload, c.report.network,
+               c.report.topology.split("(")[0]): c.report for c in cells}
     rows = []
     for wl_name in workloads:
-        wl = WORKLOADS[wl_name]
         for net_name in networks:
-            from repro.networks.zoo import get_network
-            net = get_network(net_name)
             cycle = {}
             for topo in TOPOLOGIES:
-                t0 = time.perf_counter()
-                rep = simulate(topo, net, wl, num_rounds=num_rounds)
-                us = (time.perf_counter() - t0) * 1e6
+                rep = by_key[(wl_name, net_name, topo)]
                 cycle[topo] = rep.mean_cycle_ms
-                rows.append((f"table1/{wl_name}/{net_name}/{topo}", us,
+                rows.append((f"table1/{wl_name}/{net_name}/{topo}",
+                             sweep_us / len(cells),
                              f"cycle_ms={rep.mean_cycle_ms:.2f}"))
             red = cycle["ring"] / cycle["multigraph"]
             paper = PAPER_RING_REDUCTION.get((wl_name, net_name))
             rows.append((f"table1/{wl_name}/{net_name}/reduction_vs_ring",
                          0.0,
                          f"ours={red:.2f}x paper={paper}x"))
+        # The sweep path must agree with the one-off simulator entry
+        # point — one spot-check per workload block guards the
+        # de-duplication (same TimingPlan machinery underneath).
+        net = get_network(networks[0])
+        rep = by_key[(wl_name, networks[0], "multigraph")]
+        ref = simulate("multigraph", net, WORKLOADS[wl_name],
+                       num_rounds=num_rounds)
+        assert rep.mean_cycle_ms == ref.mean_cycle_ms, (
+            f"table1 sweep path diverged from simulate() on "
+            f"{wl_name}/{networks[0]}: {rep.mean_cycle_ms!r} vs "
+            f"{ref.mean_cycle_ms!r}")
     return rows

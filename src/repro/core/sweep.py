@@ -5,14 +5,22 @@ statistics) as ONE command:
 
     python -m repro.core.sweep                  # full paper grid
     python -m repro.core.sweep --quick          # CI-sized subset
+    python -m repro.core.sweep --check          # batched == per-cell
     python -m repro.core.sweep --networks gaia,geant --t 3,5 \
         --topologies ring,multigraph --json sweep.json
 
 Every cell is a `timing.TimingPlan` (`core/timing.py`) — the same
 object the simulator and the FL trainer consume — so the tables are
-single-sourced with the training wall-clock axis. Expensive per-(net,
-workload) artifacts (the Christofides ring overlay) are built once and
-shared between the RING baseline and the multigraph cells.
+single-sourced with the training wall-clock axis. Evaluation is
+batched: all multigraph recurrence cells advance together in ONE
+`timing.TimingGrid` array program instead of per-cell Python transient
+loops, and MATCHA cells sample their FULL horizon (no tiled 512-round
+period), so the sweep's totals equal the trainer's totals for the same
+config by construction. Expensive per-(net, workload) artifacts (the
+Christofides ring overlay) are built once and shared between the RING
+baseline and the multigraph cells. The per-cell path remains available
+as the equivalence oracle (``batched=False`` /
+``python -m repro.core.sweep --check``).
 """
 
 from __future__ import annotations
@@ -46,12 +54,12 @@ class SweepConfig:
 
 @dataclasses.dataclass(frozen=True)
 class SweepCell:
-    """One grid cell: the report plus how long it took to evaluate."""
+    """One grid cell: the report plus how long its plan took to build."""
 
     report: CycleTimeReport
     t: int | None           # multigraph t, None for baselines
     num_silos: int
-    eval_ms: float
+    eval_ms: float          # plan construction (reports are batched)
 
     def row(self) -> dict:
         d = self.report.row()
@@ -60,9 +68,15 @@ class SweepCell:
         return d
 
 
-def run_sweep(cfg: SweepConfig) -> list[SweepCell]:
-    """Evaluate the whole grid; one TimingPlan per cell."""
-    cells: list[SweepCell] = []
+def build_sweep_plans(cfg: SweepConfig) -> tuple[list[timing.TimingPlan],
+                                                 list[dict]]:
+    """Construct one TimingPlan per grid cell (no evaluation yet).
+
+    Returns the plans plus per-cell metadata ``{t, num_silos,
+    build_ms}`` in the same order.
+    """
+    plans: list[timing.TimingPlan] = []
+    meta: list[dict] = []
     for net_name in cfg.networks:
         net = get_network(net_name)
         for wl_name in cfg.workloads:
@@ -76,17 +90,35 @@ def run_sweep(cfg: SweepConfig) -> list[SweepCell]:
                     cfg.t_values if topo == "multigraph" else (None,))
                 for t in ts:
                     t0 = time.perf_counter()
-                    plan = timing.make_timing_plan(
+                    plans.append(timing.make_timing_plan(
                         topo, net, wl, t=(t if t is not None else 5),
                         seed=cfg.seed,
-                        sample_rounds=min(cfg.num_rounds, 512),
+                        sample_rounds=cfg.num_rounds,
                         overlay=(overlay if topo in ("ring", "multigraph")
-                                 else None))
-                    rep = plan.report(cfg.num_rounds)
-                    cells.append(SweepCell(
-                        report=rep, t=t, num_silos=net.num_silos,
-                        eval_ms=(time.perf_counter() - t0) * 1e3))
-    return cells
+                                 else None)))
+                    meta.append(dict(
+                        t=t, num_silos=net.num_silos,
+                        build_ms=(time.perf_counter() - t0) * 1e3))
+    return plans, meta
+
+
+def run_sweep(cfg: SweepConfig, batched: bool = True) -> list[SweepCell]:
+    """Evaluate the whole grid; one TimingPlan per cell.
+
+    ``batched=True`` (default) evaluates every recurrence cell in one
+    `TimingGrid` array program; ``batched=False`` steps each cell's own
+    per-cell path — the equivalence oracle the batched mode is tested
+    against (bit-for-bit, `--check` / tests/test_timing.py).
+    """
+    plans, meta = build_sweep_plans(cfg)
+    if batched:
+        grid = timing.build_timing_grid(plans)
+        reports = grid.reports(cfg.num_rounds)
+    else:
+        reports = [p.report(cfg.num_rounds) for p in plans]
+    return [SweepCell(report=rep, t=m["t"], num_silos=m["num_silos"],
+                      eval_ms=m["build_ms"])
+            for rep, m in zip(reports, meta)]
 
 
 # ---------------------------------------------------------------------------
@@ -149,10 +181,49 @@ def format_table3(cells: list[SweepCell]) -> str:
     return "\n".join(lines)
 
 
+def consistency_check(cfg: SweepConfig) -> None:
+    """Assert batched == per-cell reports (bit-for-bit) on ``cfg``,
+    plus trainer-total == report-total for a MATCHA schedule longer
+    than the old 512-round tiled period. Raises on any mismatch.
+
+    Plans are built ONCE and evaluated through both paths, so the
+    check compares the two evaluation programs on identical plan
+    objects (plan construction is the dominant sweep cost)."""
+    plans, _ = build_sweep_plans(cfg)
+    grid = timing.build_timing_grid(plans)
+    batched = grid.reports(cfg.num_rounds)
+    oracle = [p.report(cfg.num_rounds) for p in plans]
+    for b, o in zip(batched, oracle):
+        if b != o:
+            raise AssertionError(
+                f"batched != per-cell on {o.topology}/{o.network}/"
+                f"{o.workload}: {b} vs {o}")
+    if any(t.startswith("matcha") for t in cfg.topologies):
+        from repro.core.simulator import simulate
+        from repro.fl import dpasgd
+
+        net = get_network(cfg.networks[0])
+        wl = WORKLOADS[cfg.workloads[0]]
+        # > the old 512-round period, scaled up with --rounds
+        rounds = max(520, cfg.num_rounds)
+        _, tplan = dpasgd.make_round_schedule("matcha", net, wl,
+                                              rounds=rounds, seed=cfg.seed)
+        trainer_total = float(tplan.cycle_times(rounds).sum()) / 1e3
+        report_total = simulate("matcha", net, wl, num_rounds=rounds,
+                                seed=cfg.seed).total_time_s
+        if trainer_total != report_total:
+            raise AssertionError(
+                f"matcha trainer total {trainer_total!r} != report total "
+                f"{report_total!r} at rounds={rounds}")
+    print(f"consistency_check OK: {len(batched)} cells bit-exact, "
+          f"matcha trainer==report@{max(520, cfg.num_rounds)}r")
+
+
 def main(argv: list[str] | None = None) -> None:
     ap = argparse.ArgumentParser(
         description="Batch cycle-time sweep: paper Tables 1 and 3 in one "
-                    "command (vectorized Eq. 3/4/5 engine).")
+                    "command (batched TimingGrid over the vectorized "
+                    "Eq. 3/4/5 engine).")
     ap.add_argument("--topologies", default=",".join(PAPER_TOPOLOGIES))
     ap.add_argument("--networks", default=",".join(PAPER_NETWORKS))
     ap.add_argument("--workloads", default=",".join(PAPER_WORKLOADS))
@@ -160,7 +231,11 @@ def main(argv: list[str] | None = None) -> None:
                     help="comma-separated multigraph t values")
     ap.add_argument("--rounds", type=int, default=6400)
     ap.add_argument("--quick", action="store_true",
-                    help="CI-sized subset (gaia+geant, femnist, no MATCHA)")
+                    help="CI-sized subset (gaia+geant, femnist)")
+    ap.add_argument("--check", action="store_true",
+                    help="consistency mode: assert batched == per-cell "
+                         "bit-for-bit and MATCHA trainer==report, then "
+                         "exit")
     ap.add_argument("--json", default="",
                     help="also dump all cells as JSON to this path")
     args = ap.parse_args(argv)
@@ -173,9 +248,11 @@ def main(argv: list[str] | None = None) -> None:
         num_rounds=args.rounds)
     if args.quick:
         cfg = dataclasses.replace(
-            cfg, networks=("gaia", "geant"), workloads=("femnist",),
-            topologies=tuple(t for t in cfg.topologies
-                             if not t.startswith("matcha")))
+            cfg, networks=("gaia", "geant"), workloads=("femnist",))
+
+    if args.check:
+        consistency_check(cfg)
+        return
 
     t0 = time.perf_counter()
     cells = run_sweep(cfg)
@@ -183,8 +260,10 @@ def main(argv: list[str] | None = None) -> None:
     print(format_table1(cells))
     print()
     print(format_table3(cells))
+    build = sum(c.eval_ms for c in cells) / 1e3
     print(f"\n{len(cells)} cells in {wall:.2f}s "
-          f"(sum of per-cell evals {sum(c.eval_ms for c in cells) / 1e3:.2f}s)")
+          f"(plan construction {build:.2f}s, batched grid eval "
+          f"{wall - build:.2f}s)")
     if args.json:
         with open(args.json, "w") as f:
             json.dump([c.row() for c in cells], f, indent=1)

@@ -24,7 +24,13 @@ Two plan kinds:
   rounds (BENCH_sim.json records the speedup).
 * ``cyclic`` (static / star / ring / sampled) — a materialized
   ``(P,)`` per-round cycle-time array tiled over rounds (P=1 for
-  static designs, P=sample_rounds for MATCHA).
+  static designs; MATCHA samples the FULL horizon, P=num_rounds, so
+  nothing is tiled and trainer totals equal report totals exactly).
+
+Many plans batch further: `build_timing_grid` stacks every recurrence
+plan into one `TimingGrid` array program over a padded (C, E_max) cell
+axis — the sweep evaluates all 105 paper cells in max-transient vector
+steps (DESIGN.md §11).
 
 The dict-based `delay.MultigraphDelayTracker` is kept untouched as the
 equivalence oracle (the same way ``runtime="legacy"`` anchors the flat
@@ -222,6 +228,18 @@ class TimingPlan:
 
     def report(self, num_rounds: int) -> CycleTimeReport:
         if self.kind == "cyclic":
+            if len(self.period_times) == num_rounds:
+                # Full-horizon plan (every round sampled, e.g. MATCHA
+                # since the tiling fix): the report IS the per-round
+                # series, so total = sum and mean = sum/n — bitwise the
+                # same reduction the trainer runs over
+                # `cycle_times(num_rounds)`, which is what makes
+                # trainer totals == report totals exact.
+                return CycleTimeReport(
+                    topology=self.topology, network=self.network,
+                    workload=self.workload, num_rounds=num_rounds,
+                    mean_cycle_ms=float(self.period_times.mean()),
+                    total_time_s=float(self.period_times.sum()) / 1000.0)
             # Equal-weight the sampled period (the MATCHA estimator is
             # "mean of the sampled cycle times x rounds"): a truncated
             # tiling of a period that does not divide num_rounds would
@@ -234,6 +252,14 @@ class TimingPlan:
                 mean_cycle_ms=mean,
                 total_time_s=mean * num_rounds / 1000.0)
         taus = self.cycle_times(num_rounds)
+        return self._report_from_taus(taus, num_rounds)
+
+    def _report_from_taus(self, taus: np.ndarray,
+                          num_rounds: int) -> CycleTimeReport:
+        """Recurrence-cell report given an externally computed tau
+        series (the batched `TimingGrid` hands in its row for this
+        cell; `report` hands in the per-cell series) — one shared
+        reduction path, so grid and per-cell reports cannot diverge."""
         iso = self.isolated_per_round(num_rounds)
         return CycleTimeReport(
             topology=self.topology, network=self.network,
@@ -604,21 +630,315 @@ def ring_timing_plan(net: NetworkSpec, wl: Workload,
     return _cyclic_plan("ring", net, wl, np.array([lam]))
 
 
+def sampled_cycle_times(design, net: NetworkSpec, wl: Workload,
+                        num_rounds: int,
+                        chunk_elems: int = 4_000_000) -> np.ndarray:
+    """Eq. 5 cycle times of a sampled matching design for EVERY round,
+    vectorized: ``(num_rounds,)`` f64 in ms.
+
+    Bit-for-bit identical to ``static_cycle_time(net, wl,
+    design.round_graph(k))`` per round (the per-graph path is the
+    equivalence oracle, tests/test_timing.py): the per-round active
+    degrees are one bool matmul ``activation @ node_in_matching``, the
+    directed Eq. 3 delays reuse the same op order as
+    `directed_delay_matrix` (per-node link shares gathered per pair),
+    and the per-round max runs masked over the full base edge list.
+    Work is chunked over rounds so the ``(rounds, E)`` intermediates
+    stay within ``chunk_elems`` doubles even on ebone's K_87.
+    """
+    matchings = design.matchings
+    base_pairs = sorted({p for m in matchings for p in m})
+    num_pairs = len(base_pairs)
+    comp = wl.compute_ms(net).astype(np.float64)
+    n = net.num_silos
+    act = design.activation_matrix(num_rounds)
+    if num_rounds == 0:
+        return np.zeros(0, np.float64)
+    if num_pairs == 0:
+        return np.full(num_rounds, float(comp.max()) if n else 0.0)
+    pair_of = {p: e for e, p in enumerate(base_pairs)}
+    m_of_pair = np.empty(num_pairs, np.int64)
+    node_in = np.zeros((len(matchings), n), np.int64)
+    for mi, m in enumerate(matchings):
+        for a, b in m:
+            m_of_pair[pair_of[(a, b)]] = mi
+            node_in[mi, a] = node_in[mi, b] = 1
+    pi = np.fromiter((p[0] for p in base_pairs), np.int64, num_pairs)
+    pj = np.fromiter((p[1] for p in base_pairs), np.int64, num_pairs)
+    lat = net.latency_ms
+    up = net.upload_gbps()
+    dn = net.download_gbps()
+    # (comp_i + lat_ij) rounds first in directed_delay_matrix, so the
+    # per-direction bases are per-pair constants across rounds.
+    base_ij = comp[pi] + lat[pi, pj]
+    base_ji = comp[pj] + lat[pj, pi]
+    # Uniform access capacity (every paper network: one capacity_gbps
+    # for all silos) collapses Eq. 3's per-direction link shares:
+    # min(c/s_i, c/s_j) is c/max(s_i, s_j) — the SAME division the
+    # general path would pick — so the transfer term is a table lookup
+    # over max-degree, and max(base_ij + t, base_ji + t) equals
+    # max(base_ij, base_ji) + t bitwise (rounded addition of a shared t
+    # is monotone). Halves the number of (rounds, E) array passes.
+    uniform_cap = bool((up == up[0]).all() and (dn == up[0]).all())
+    if uniform_cap:
+        shares = np.arange(1, len(matchings) + 1, dtype=np.int64)
+        tr_table = wl.model_size_mbits / ((up[0] / shares) * 1000.0) * 1000.0
+        base_max = np.maximum(base_ij, base_ji)
+    out = np.empty(num_rounds, np.float64)
+    rows = max(1, chunk_elems // num_pairs)
+    for lo in range(0, num_rounds, rows):
+        a = act[lo:lo + rows]
+        deg = a.astype(np.int64) @ node_in              # (Rc, N)
+        share = np.maximum(deg, 1)
+        if uniform_cap:
+            smax = np.maximum(share[:, pi], share[:, pj])
+            pd = base_max[None, :] + tr_table[smax - 1]
+        else:
+            a_up = up / share                           # (Rc, N)
+            a_dn = dn / share
+            tr = wl.model_size_mbits / (
+                np.minimum(a_up[:, pi], a_dn[:, pj]) * 1000.0) * 1000.0
+            d_ij = base_ij[None, :] + tr
+            tr = wl.model_size_mbits / (
+                np.minimum(a_up[:, pj], a_dn[:, pi]) * 1000.0) * 1000.0
+            d_ji = base_ji[None, :] + tr
+            pd = np.maximum(d_ij, d_ji)
+        live = a[:, m_of_pair]
+        tau = np.max(np.where(live, pd, -np.inf), axis=1)
+        lone = np.max(np.where(deg == 0, comp[None, :], -np.inf), axis=1)
+        tau = np.maximum(tau, lone)
+        out[lo:lo + rows] = np.where(np.isfinite(tau), tau, 0.0)
+    return out
+
+
 def sampled_timing_plan(name: str, net: NetworkSpec, wl: Workload, design,
                         sample_rounds: int = 512,
                         graphs: list[SimpleGraph] | None = None) -> TimingPlan:
-    """Per-round random topologies (MATCHA): materialize one sampled
-    period of per-round Eq. 5 cycle times and tile it.
+    """Per-round random topologies (MATCHA): materialize per-round
+    Eq. 5 cycle times for ``sample_rounds`` rounds.
+
+    Callers that report over ``num_rounds`` rounds should pass
+    ``sample_rounds=num_rounds`` (what `simulate`, the sweep, and
+    `dpasgd.make_round_schedule` now do): with every round sampled
+    there is no tiled period and the trainer's wall-clock total equals
+    the report total by construction. The default 512-round period +
+    tiling is kept for callers that explicitly want the cheaper
+    truncated estimator.
 
     Pass ``graphs`` to time an already-materialized per-round sequence
-    (``design`` is then ignored) — `dpasgd.make_round_schedule` does
-    this so the wall-clock axis is computed on the EXACT graphs the
-    RoundPlan trains on, not on a second design's RNG stream.
+    (``design`` is then ignored) via the scalar per-graph path — the
+    equivalence oracle for `sampled_cycle_times`.
     """
     if graphs is None:
-        graphs = [design.round_graph(k) for k in range(sample_rounds)]
-    times = np.array([static_cycle_time(net, wl, g) for g in graphs])
+        times = sampled_cycle_times(design, net, wl, sample_rounds)
+    else:
+        times = np.array([static_cycle_time(net, wl, g) for g in graphs])
     return _cyclic_plan(name, net, wl, times)
+
+
+# ---------------------------------------------------------------------------
+# batched timing grid: all recurrence cells in one array program
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TimingGrid:
+    """A stacked-cell view of many TimingPlans (DESIGN.md §11).
+
+    The sweep used to step every multigraph cell's Eq. 4 transient as
+    its own Python loop — 105 paper cells, 105 loops. The grid lifts
+    the recurrence onto a cell axis: all C recurrence cells advance
+    together as ``(C, E_max)`` array ops (padded edge lists + per-cell
+    masks), with per-cell periodic-orbit short-circuiting driven by a
+    vectorized snapshot hash (exact-verify on hit, so extrapolation
+    only ever fires on a bit-for-bit recurrence). Cyclic cells (static
+    / star / ring / sampled) keep their materialized periods and cost
+    one reduction each.
+
+    Every row is bit-for-bit identical to the corresponding
+    ``plan.cycle_times(num_rounds)`` — the per-cell paths stay as the
+    equivalence oracles (tests/test_timing.py).
+    """
+
+    plans: tuple[TimingPlan, ...]
+    rec_rows: tuple[int, ...]           # indices of recurrence cells
+    # stacked recurrence arrays, padded to (C, S_max, E_max):
+    d0: np.ndarray | None               # (C, E_max) f64, pad 0
+    pair_comp: np.ndarray | None        # (C, E_max) f64, pad 0
+    strong: np.ndarray | None           # (C, S_max, E_max) bool, pad False
+    trans: np.ndarray | None            # (C, S_max, E_max) int8, pad T_SS
+    lone_comp: np.ndarray | None        # (C, S_max) f64, pad -inf
+    num_states: np.ndarray | None       # (C,) int64
+
+    @property
+    def num_cells(self) -> int:
+        return len(self.plans)
+
+    def cycle_time_matrix(self, num_rounds: int) -> np.ndarray:
+        """(num_cells, num_rounds) f64 ms — every cell's tau series."""
+        out = np.empty((len(self.plans), num_rounds), np.float64)
+        if self.rec_rows:
+            rec = _grid_recurrence_taus(
+                self.d0, self.pair_comp, self.strong, self.trans,
+                self.lone_comp, self.num_states, num_rounds)
+            for row, c in enumerate(self.rec_rows):
+                out[c] = rec[row]
+        for c, plan in enumerate(self.plans):
+            if plan.kind != "recurrence":
+                out[c] = plan.cycle_times(num_rounds)
+        return out
+
+    def reports(self, num_rounds: int) -> list[CycleTimeReport]:
+        """One CycleTimeReport per plan, recurrence rows batched."""
+        rec_taus = (_grid_recurrence_taus(
+            self.d0, self.pair_comp, self.strong, self.trans,
+            self.lone_comp, self.num_states, num_rounds)
+            if self.rec_rows else None)
+        row_of = {c: row for row, c in enumerate(self.rec_rows)}
+        out = []
+        for c, plan in enumerate(self.plans):
+            if plan.kind == "recurrence":
+                out.append(plan._report_from_taus(rec_taus[row_of[c]],
+                                                  num_rounds))
+            else:
+                out.append(plan.report(num_rounds))
+        return out
+
+
+def build_timing_grid(plans: list[TimingPlan]) -> TimingGrid:
+    """Stack the recurrence cells of ``plans`` into one padded program.
+
+    Padding is inert by construction: phantom edges carry ``d0 = 0``,
+    transition code ``T_SS`` in every state (so their delay never
+    changes) and a False strong mask (so they never enter the Eq. 5
+    max); phantom states are never indexed because each cell's phase is
+    ``k % S_c``.
+    """
+    rec_rows = tuple(c for c, p in enumerate(plans)
+                     if p.kind == "recurrence")
+    if not rec_rows:
+        return TimingGrid(plans=tuple(plans), rec_rows=(), d0=None,
+                          pair_comp=None, strong=None, trans=None,
+                          lone_comp=None, num_states=None)
+    cells = [plans[c] for c in rec_rows]
+    num_cells = len(cells)
+    # >= 1 so a zero-pair cell (1-silo overlay) still reduces over a
+    # phantom edge instead of an empty axis; phantoms are inert.
+    e_max = max(max((len(p.d0) for p in cells), default=0), 1)
+    s_max = max(p.num_states for p in cells)
+    d0 = np.zeros((num_cells, e_max), np.float64)
+    pair_comp = np.zeros((num_cells, e_max), np.float64)
+    strong = np.zeros((num_cells, s_max, e_max), bool)
+    trans = np.full((num_cells, s_max, e_max), T_SS, np.int8)
+    lone = np.full((num_cells, s_max), -np.inf, np.float64)
+    num_states = np.empty(num_cells, np.int64)
+    for row, p in enumerate(cells):
+        e, s = len(p.d0), p.num_states
+        d0[row, :e] = p.d0
+        pair_comp[row, :e] = p.pair_comp
+        strong[row, :s, :e] = p.strong
+        trans[row, :s, :e] = p.trans
+        lone[row, :s] = p.lone_comp
+        num_states[row] = s
+    return TimingGrid(plans=tuple(plans), rec_rows=rec_rows, d0=d0,
+                      pair_comp=pair_comp, strong=strong, trans=trans,
+                      lone_comp=lone, num_states=num_states)
+
+
+#: splitmix64's odd 64-bit mixing constants — shared by the grid's
+#: vectorized snapshot hash below (a hash hit is always exact-verified
+#: against the stored snapshot before the orbit short-circuit fires)
+#: and by `topology._counter_uniform`'s counter-based MATCHA draws.
+SPLITMIX64_CONSTANTS = (0x9E3779B97F4A7C15, 0xBF58476D1CE4E5B9,
+                        0x94D049BB133111EB)
+
+
+def _snapshot_hashes(d_cur: np.ndarray, d_prev: np.ndarray,
+                     tau: np.ndarray, phase: np.ndarray,
+                     weights: np.ndarray) -> np.ndarray:
+    """(C,) uint64 — one mixed hash per cell over this round's
+    ``(phase, d_k, d_{k-1}, tau_k)`` snapshot, all-vectorized."""
+    a, b, c = (np.uint64(x) for x in SPLITMIX64_CONSTANTS)
+    h1 = (d_cur.view(np.uint64) * weights).sum(axis=1)
+    h2 = (d_prev.view(np.uint64) * weights).sum(axis=1)
+    h = h1 * a ^ h2 * b ^ np.ascontiguousarray(tau).view(np.uint64) * c
+    return h ^ phase.astype(np.uint64) * a
+
+
+def _grid_recurrence_taus(d0, pair_comp, strong, trans, lone_comp,
+                          num_states, num_rounds: int) -> np.ndarray:
+    """All-cells Eq. 4/5: one vectorized round step for the whole grid.
+
+    Bit-for-bit identical to per-cell `_recurrence_taus`: every branch
+    applies the same IEEE-754 ops (`np.where` merely selects among
+    branch values computed with the per-cell formulas), the Eq. 5 max
+    reduces over the same strong set, and the orbit extrapolation fires
+    only on an exact-verified snapshot recurrence, after which the
+    remaining rounds of that cell are a deterministic replay. The live
+    loop runs until every cell has locked an orbit (or rounds run out),
+    so the whole grid costs max-transient vector steps rather than
+    sum-of-transients Python loops.
+    """
+    num_cells, e_max = d0.shape
+    ar = np.arange(num_cells)
+    rng = np.random.default_rng(0x5EED)
+    weights = rng.integers(0, 2**63, e_max, np.uint64) * np.uint64(2) \
+        + np.uint64(1)
+    taus = np.empty((num_cells, num_rounds), np.float64)
+    d_cur = d0.copy()
+    d_prev = d0.copy()
+    prev_tau = np.zeros(num_cells)
+    hist: list[np.ndarray] = []          # hist[k] = d after round k
+    seen: list[dict[int, list[int]]] = [dict() for _ in range(num_cells)]
+    done = np.zeros(num_cells, bool)
+    period = np.zeros(num_cells, np.int64)
+    k = 0
+    while k < num_rounds:
+        s = k % num_states                            # (C,) phases
+        if k == 0:
+            st = strong[ar, s]
+            tau = np.max(np.where(st, d_cur, -np.inf), axis=1)
+        else:
+            code = trans[ar, s]
+            ws = np.maximum(pair_comp, d_cur - d_prev)
+            d_next = np.where(
+                code == T_SS, d_cur, np.where(
+                    code == T_WW, prev_tau[:, None] + d_cur, np.where(
+                        code == T_SW, prev_tau[:, None], ws)))
+            d_prev, d_cur = d_cur, d_next
+            st = strong[ar, s]
+            tau = np.max(np.where(st, d_cur, -np.inf), axis=1)
+        tau = np.maximum(tau, lone_comp[ar, s])
+        taus[:, k] = tau
+        prev_tau = tau
+        if not done.all():
+            hist.append(d_cur.copy())
+            h = _snapshot_hashes(d_cur, d_prev, tau, s, weights)
+            for c in np.flatnonzero(~done):
+                cands = seen[c].setdefault(int(h[c]), [])
+                for k0 in cands:
+                    if (k - k0) % num_states[c]:
+                        continue           # phase mismatch (hash lied)
+                    prev0 = hist[k0 - 1][c] if k0 else d0[c]
+                    if (taus[c, k] == taus[c, k0]
+                            and np.array_equal(hist[k][c], hist[k0][c])
+                            and np.array_equal(hist[k - 1][c] if k
+                                               else d0[c], prev0)):
+                        done[c] = True
+                        period[c] = k - k0
+                        break
+                else:
+                    cands.append(k)
+        k += 1
+        if done.all():
+            break
+    if k < num_rounds:
+        # every cell locked an exact orbit at or before round k-1:
+        # the rest of each row is a tiled replay.
+        for c in range(num_cells):
+            p = int(period[c])
+            taus[c, k:] = _tile_to(taus[c, k - p:k], num_rounds - k)
+    return taus
 
 
 def make_timing_plan(topology: str, net: NetworkSpec, wl: Workload, *,

@@ -26,13 +26,20 @@ from repro.networks.zoo import NetworkSpec
 
 
 def nominal_delay_matrix(net: NetworkSpec, wl: Workload) -> np.ndarray:
-    """Congestion-free (degree-1) pair delay between every silo pair."""
+    """Congestion-free (degree-1) pair delay between every silo pair.
+
+    Array form of ``pair_delay_ms(..., deg=ones)`` over the whole matrix
+    (same elementwise Eq. 3 ops, so bit-identical weights feed the
+    MST/dMBST/ring constructions): the old N^2 scalar loop dominated
+    topology construction on exodus/ebone.
+    """
+    from repro.core.timing import directed_delay_matrix
+
     n = net.num_silos
     ones = np.ones(n, dtype=np.int64)
-    d = np.zeros((n, n))
-    for i in range(n):
-        for j in range(i + 1, n):
-            d[i, j] = d[j, i] = pair_delay_ms(net, wl, i, j, ones)
+    d = directed_delay_matrix(net, wl, ones, ones)
+    d = np.maximum(d, d.T)
+    np.fill_diagonal(d, 0.0)
     return d
 
 
@@ -87,15 +94,27 @@ class StaticTopology:
 
 
 def star_topology(net: NetworkSpec, wl: Workload) -> StaticTopology:
-    """STAR [3]: orchestrator at the hub minimizing the round cycle time."""
+    """STAR [3]: orchestrator at the hub minimizing the round cycle time.
+
+    Vectorized over candidate hubs: for hub h the star degrees are 1 for
+    the leaves and N-1 for the hub, so every pair delay of every
+    candidate star is an entry of two directed-delay matrices (leaf->hub
+    with out_deg 1 / in_deg N-1, and hub->leaf reversed). Same Eq. 3
+    ops as the old per-hub scalar loop, first minimum wins on ties.
+    """
+    from repro.core.timing import directed_delay_matrix
+
     n = net.num_silos
-    best_hub, best_ct = 0, np.inf
-    for hub in range(n):
-        g = make_graph(n, [(hub, i) for i in range(n) if i != hub])
-        deg = g.degrees()
-        ct = max(pair_delay_ms(net, wl, hub, i, deg) for i in range(n) if i != hub)
-        if ct < best_ct:
-            best_hub, best_ct = hub, ct
+    if n == 1:
+        return StaticTopology("star", make_graph(1, []))
+    ones = np.ones(n, np.int64)
+    fan = np.full(n, n - 1, np.int64)
+    off_diag = ~np.eye(n, dtype=bool)
+    d_up = directed_delay_matrix(net, wl, ones, fan)    # [leaf, hub]
+    d_dn = directed_delay_matrix(net, wl, fan, ones)    # [hub, leaf]
+    pair = np.maximum(d_up, d_dn.T)                     # [leaf, hub]
+    ct = np.max(pair, axis=0, initial=-np.inf, where=off_diag)
+    best_hub = int(np.argmin(ct))
     return StaticTopology(
         "star", make_graph(n, [(best_hub, i) for i in range(n) if i != best_hub]))
 
@@ -170,54 +189,150 @@ def ring_topology(net: NetworkSpec, wl: Workload) -> StaticTopology:
     if n <= 3:
         cycle = list(range(n)) + [0]
     else:
-        cycle = nx.approximation.traveling_salesman_problem(
-            g, cycle=True, method=nx.approximation.christofides)
+        # `traveling_salesman_problem` first completes the graph with
+        # all-pairs shortest paths, which is a pure no-op on our
+        # already-complete metric graph (verified identical tours on
+        # every paper network x workload) but costs more than the
+        # Christofides run itself — call the method directly.
+        cycle = nx.approximation.christofides(g)
     pairs = {canon(int(cycle[i]), int(cycle[i + 1])) for i in range(len(cycle) - 1)}
     return StaticTopology("ring", make_graph(n, pairs))
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class MatchaTopology:
     """MATCHA [85]: matching decomposition + random activation.
 
-    The base graph is decomposed into matchings (vertex coloring of the
-    line graph); each round every matching is activated independently
+    The base graph is decomposed into matchings (a proper edge
+    coloring); each round every matching is activated independently
     with probability `budget` (the communication budget C_b). MATCHA
     runs over the connectivity graph; MATCHA(+) — Marfoq et al.'s
     variant — runs over the (approximate) physical underlay, which is
     why the two coincide on fully-meshed cloud networks (Table 1:
     identical Gaia/Amazon rows) and differ on ISP topologies.
+
+    Activation draws are *counter-based*: the coin flip for (round k,
+    matching m) is a pure splitmix64-style hash of ``(seed, k, m)``, so
+    ``round_graph(k)`` is a pure function of ``(seed, k)`` —
+    reproducible across processes and call orders, and the whole
+    6,400-round activation matrix is one vectorized hash instead of
+    6,400 Generator constructions. (The old design hid a mutable RNG
+    stream in the instance, so two consumers walking the same design,
+    or the same consumer calling ``round_graph`` twice, silently
+    sampled different sequences.)
     """
 
     name: str
     num_nodes: int
-    matchings: list[tuple[Pair, ...]]
+    matchings: tuple[tuple[Pair, ...], ...]
     budget: float
     seed: int = 0
 
-    def __post_init__(self):
-        self._rng = np.random.default_rng(self.seed)
+    @property
+    def num_matchings(self) -> int:
+        return len(self.matchings)
+
+    def activation(self, k: int) -> np.ndarray:
+        """(M,) bool — which matchings are live in round k."""
+        return self.activation_rows(np.asarray([k]))[0]
+
+    def activation_rows(self, rounds_idx: np.ndarray) -> np.ndarray:
+        """(len(rounds_idx), M) bool activation for arbitrary rounds."""
+        u = _counter_uniform(self.seed, rounds_idx, len(self.matchings))
+        return u < self.budget
+
+    def activation_matrix(self, rounds: int) -> np.ndarray:
+        """(rounds, M) bool — the whole sampled horizon at once."""
+        return self.activation_rows(np.arange(rounds))
 
     def round_graph(self, k: int) -> SimpleGraph:
+        act = self.activation(k)
         pairs: list[Pair] = []
-        for m in self.matchings:
-            if self._rng.random() < self.budget:
+        for live, m in zip(act, self.matchings):
+            if live:
                 pairs.extend(m)
         return make_graph(self.num_nodes, pairs)
 
 
+def _counter_uniform(seed: int, rounds_idx: np.ndarray,
+                     num_streams: int) -> np.ndarray:
+    """Counter-based uniforms in [0, 1): ``(len(rounds_idx), M)``.
+
+    splitmix64 finalizer over a linear mix of (seed, round, stream) —
+    stateless, so any subset of rounds can be drawn in any order (or
+    all at once) with identical bits. 53-bit mantissa uniforms, same
+    construction as `numpy`'s float64 path.
+    """
+    from repro.core.timing import SPLITMIX64_CONSTANTS
+
+    p1, p2, p3 = (np.uint64(x) for x in SPLITMIX64_CONSTANTS)
+    k = np.asarray(rounds_idx, np.uint64)[:, None]
+    m = np.arange(num_streams, dtype=np.uint64)[None, :]
+    seed_mix = np.uint64((seed * SPLITMIX64_CONSTANTS[2]) % 2**64)
+    x = (seed_mix + k) * p1 + m * p2
+    x ^= x >> np.uint64(30)
+    x *= p2
+    x ^= x >> np.uint64(27)
+    x *= p3
+    x ^= x >> np.uint64(31)
+    return (x >> np.uint64(11)).astype(np.float64) * float(2.0 ** -53)
+
+
+def _round_robin_matchings(n: int) -> list[list[Pair]]:
+    """Circle-method 1-factorization of K_n: n-1 perfect matchings for
+    even n, n near-perfect matchings (one idle node each) for odd n —
+    the optimal edge coloring, built in O(n^2) without a line graph."""
+    odd = n % 2 == 1
+    m = n + 1 if odd else n          # pad odd n with a phantom node
+    rounds = m - 1
+    out: list[list[Pair]] = []
+    ring = list(range(1, m))         # node 0 fixed, the rest rotate
+    for r in range(rounds):
+        rot = ring[r:] + ring[:r]
+        stack = [0] + rot
+        pairs = []
+        for a, b in zip(stack[:m // 2], reversed(stack[m // 2:])):
+            if odd and (a == m - 1 or b == m - 1):
+                continue             # drop the phantom node's pair
+            pairs.append(canon(a, b))
+        out.append(sorted(pairs))
+    return out
+
+
 def _matching_decomposition(graph: SimpleGraph) -> list[tuple[Pair, ...]]:
-    """Edge-color the graph greedily; each color class is a matching."""
-    lg = nx.Graph()
-    lg.add_nodes_from(graph.pairs)
-    for a in graph.pairs:
-        for b in graph.pairs:
-            if a < b and len(set(a) & set(b)) > 0:
-                lg.add_edge(a, b)
-    coloring = nx.coloring.greedy_color(lg, strategy="largest_first")
+    """Edge-color the graph; each color class is a matching.
+
+    Complete graphs (MATCHA's connectivity base) take the optimal
+    circle-method 1-factorization. Everything else gets a
+    Misra–Gries-style greedy pass: scan edges densest-vertex-first and
+    give each the smallest color free at both endpoints, tracked in one
+    (N, colors) numpy availability table — O(E * Delta) array ops
+    instead of the old O(E^2) Python line-graph construction, which
+    dominated full sweeps on exodus/ebone.
+    """
+    n = graph.num_nodes
+    num_pairs = graph.num_pairs
+    if num_pairs == n * (n - 1) // 2 and n >= 2:
+        return [tuple(m) for m in _round_robin_matchings(n)]
+    if not num_pairs:
+        return []
+    deg = graph.degrees()
+    max_colors = 2 * int(deg.max()) - 1 if deg.max() else 1
+    pi = np.fromiter((p[0] for p in graph.pairs), np.int64, num_pairs)
+    pj = np.fromiter((p[1] for p in graph.pairs), np.int64, num_pairs)
+    # Densest endpoints first (the Misra–Gries fan heuristic's spirit):
+    # saturated vertices pick colors while the palette is still tight.
+    order = np.argsort(-(deg[pi] + deg[pj]), kind="stable")
+    used = np.zeros((n, max_colors), dtype=bool)
+    color = np.empty(num_pairs, dtype=np.int64)
+    for e in order:
+        i, j = pi[e], pj[e]
+        c = int(np.argmax(~(used[i] | used[j])))
+        color[e] = c
+        used[i, c] = used[j, c] = True
     classes: dict[int, list[Pair]] = {}
-    for pair, c in coloring.items():
-        classes.setdefault(c, []).append(pair)
+    for e, c in enumerate(color):
+        classes.setdefault(int(c), []).append(graph.pairs[e])
     return [tuple(sorted(v)) for _, v in sorted(classes.items())]
 
 
@@ -225,7 +340,7 @@ def matcha_topology(net: NetworkSpec, wl: Workload, budget: float = 0.5,
                     seed: int = 0) -> MatchaTopology:
     base = connectivity_graph(net)
     return MatchaTopology("matcha", net.num_silos,
-                          _matching_decomposition(base), budget, seed)
+                          tuple(_matching_decomposition(base)), budget, seed)
 
 
 def matcha_plus_topology(net: NetworkSpec, wl: Workload, budget: float = 0.5,
@@ -235,7 +350,7 @@ def matcha_plus_topology(net: NetworkSpec, wl: Workload, budget: float = 0.5,
     else:
         base = physical_graph(net)
     return MatchaTopology("matcha_plus", net.num_silos,
-                          _matching_decomposition(base), budget, seed)
+                          tuple(_matching_decomposition(base)), budget, seed)
 
 
 TOPOLOGIES = {

@@ -170,15 +170,16 @@ def make_round_schedule(topology: str, net: NetworkSpec, wl: Workload, *,
     design = build_topology(topology, net, wl, **(
         {"seed": seed} if topology.startswith("matcha") else {}))
     if topology.startswith("matcha"):
-        # One design, one materialized graph sequence: the RoundPlan
-        # trains on graphs[k] and the TimingPlan times the SAME list
-        # (every round, no tiling), so the two axes cannot
-        # desynchronize.
-        graphs = [design.round_graph(k) for k in range(max(rounds, 1))]
+        # One design, one counter-based activation sequence: round k's
+        # matchings are a pure function of (seed, k), the RoundPlan
+        # trains on round_graph(k) and the TimingPlan's vectorized
+        # per-round times come from the SAME activation rows (every
+        # round sampled, no tiled period), so the trainer's wall-clock
+        # total and `simulate(...)`'s report total are identical —
+        # tests/test_timing.py holds them bit-for-bit equal.
         tplan = timing.sampled_timing_plan(topology, net, wl, design,
-                                           graphs=graphs)
-        return matcha_plan(design, net.num_silos, rounds,
-                           graphs=graphs), tplan
+                                           sample_rounds=max(rounds, 1))
+        return matcha_plan(design, net.num_silos, rounds), tplan
     g = design.round_graph(0)
     if topology == "ring":
         return static_plan(g), timing.ring_timing_plan(net, wl, graph=g)

@@ -26,8 +26,37 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 Params = Any
+
+
+def pin_f32(x: jax.Array, step: jax.Array) -> jax.Array:
+    """Pin ``x`` to its rounded float32 value across layouts.
+
+    XLA:CPU lets LLVM contract ``a*b + c`` into an FMA, and whether it
+    fires depends on how the surrounding computation was fused — the
+    flat `(N, T)` runtime and the legacy per-leaf pytree runtime got
+    DIFFERENT contractions for the momentum update, so the two drifted
+    by ulps (the one gap in the flat-vs-legacy bitwise equivalence).
+    `jax.default_matmul_precision` only pins dot precision and the
+    obvious barriers are erased before LLVM sees them
+    (`lax.optimization_barrier` does not survive elementwise fusion,
+    and identity `reduce_precision`/double-bitcasts are simplified
+    away), so this helper routes the value through an integer xor with
+    an *opaque zero* — ``step >> 31`` for a non-negative traced int32
+    ``step`` is always 0 at runtime, but the compiler cannot prove it,
+    so the product must be rounded to f32 before the add. Apply it to
+    the multiply feeding an add/sub and the pattern is pinned to
+    mul-then-add in every layout.
+
+    Non-f32 inputs pass through unchanged (the FL runtimes train f32).
+    """
+    if x.dtype != jnp.float32:
+        return x
+    zero = lax.shift_right_logical(step.astype(jnp.uint32), jnp.uint32(31))
+    u = lax.bitcast_convert_type(x, jnp.uint32) ^ zero
+    return lax.bitcast_convert_type(u, jnp.float32)
 
 
 @dataclasses.dataclass(frozen=True)

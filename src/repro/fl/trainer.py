@@ -209,9 +209,17 @@ def run_fl(cfg: FLConfig) -> FLResult:
     else:
         raise ValueError(f"unknown runtime {cfg.runtime!r}")
 
-    cycle = tplan.cycle_times(cfg.rounds).tolist()
+    # One TimingPlan, one report: the per-round axis comes from
+    # `cycle_times` and the scalar totals from the SAME plan's
+    # `report`, which is also exactly what `simulate(...)` returns for
+    # this config — trainer totals and simulator reports are one
+    # number, not two estimators (the old MATCHA path tiled a 512-round
+    # period here while the report averaged the period, so the two
+    # drifted apart for rounds > 512).
+    cycle = tplan.cycle_times(cfg.rounds)
+    rep = tplan.report(cfg.rounds)
     return FLResult(config=cfg, round_losses=round_losses,
                     eval_rounds=eval_rounds, eval_accs=eval_accs,
-                    cycle_times_ms=cycle,
-                    mean_cycle_ms=float(np.mean(cycle)),
-                    total_time_s=float(np.sum(cycle)) / 1e3)
+                    cycle_times_ms=cycle.tolist(),
+                    mean_cycle_ms=rep.mean_cycle_ms,
+                    total_time_s=rep.total_time_s)

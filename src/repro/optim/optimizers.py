@@ -21,6 +21,8 @@ def _tmap(f, *trees):
 
 def sgd(lr: float, momentum: float = 0.0,
         weight_decay: float = 0.0) -> Optimizer:
+    from repro.fl.flat import pin_f32  # lazy: optim must not import fl
+
     def init(params):
         if momentum == 0.0:
             return {"step": jnp.zeros((), jnp.int32)}
@@ -37,8 +39,14 @@ def sgd(lr: float, momentum: float = 0.0,
             new = _tmap(lambda p, g: p - (lr_t * g).astype(p.dtype),
                         params, grads)
             return new, {"step": step}
-        mu = _tmap(lambda m, g: momentum * m + g, state["mu"], grads)
-        new = _tmap(lambda p, m: p - (lr_t * m).astype(p.dtype), params, mu)
+        # `pin_f32` pins the mul-feeding-add sites to rounded f32 so
+        # the momentum path is bit-identical between this per-leaf
+        # layout and the flat (N, T) layout (see fl/flat.py) —
+        # otherwise LLVM FMA-contracts the two layouts differently.
+        mu = _tmap(lambda m, g: pin_f32(momentum * m, step) + g,
+                   state["mu"], grads)
+        new = _tmap(lambda p, m: p - pin_f32(lr_t * m, step).astype(p.dtype),
+                    params, mu)
         return new, {"step": step, "mu": mu}
 
     return Optimizer(init, update)
@@ -56,6 +64,8 @@ def flat_sgd(lr: float, momentum: float = 0.0,
     construction in DPASGD's synchronized rounds).
     """
 
+    from repro.fl.flat import pin_f32  # lazy: optim must not import fl
+
     def init(w):
         state = {"step": jnp.zeros((), jnp.int32)}
         if momentum != 0.0:
@@ -69,8 +79,12 @@ def flat_sgd(lr: float, momentum: float = 0.0,
             g = g + weight_decay * w.astype(g.dtype)
         if momentum == 0.0:
             return w - (lr_t * g).astype(w.dtype), {"step": step}
-        mu = momentum * state["mu"] + g
-        return w - (lr_t * mu).astype(w.dtype), {"step": step, "mu": mu}
+        # same pinned sites as `sgd` — the two momentum paths are
+        # bit-for-bit equal in every layout (tests/test_flat_runtime.py
+        # holds them exactly equal, not allclose).
+        mu = pin_f32(momentum * state["mu"], step) + g
+        return (w - pin_f32(lr_t * mu, step).astype(w.dtype),
+                {"step": step, "mu": mu})
 
     return Optimizer(init, update)
 

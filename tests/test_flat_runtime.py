@@ -7,9 +7,9 @@ CSR edge-aggregation kernel, and the trainer's whole-cycle path):
     random graphs with random degrees INCLUDING isolated destinations
     (zero incoming edges — the paper's isolated-node mechanism);
   * one flat-runtime cycle == R jitted legacy `fl_round_step` calls,
-    bit-for-bit in fp32 (momentum=0; the momentum path is allowed a
-    few ulp — XLA fuses `momentum*mu + g` into an FMA differently for
-    the packed vs per-leaf layout);
+    bit-for-bit in fp32 INCLUDING momentum (the optimizers pin the FMA
+    contraction of `momentum*mu + g` / `w - lr*mu` via fl/flat.py's
+    `pin_f32`, so packed and per-leaf layouts compute identical bits);
   * a full multigraph cycle is ONE compiled dispatch: the cycle
     function traces exactly once across repeated cycles;
   * flat_sgd == vmapped per-silo sgd;
@@ -210,17 +210,13 @@ def test_flat_cycle_matches_legacy_rounds(momentum):
     wl = np.asarray(flatmod.ravel_stacked(rt.spec, sl.silo_params))
     bl = np.asarray(flatmod.ravel_stacked(rt.spec, sl.buffers))
     bf = np.asarray(sf.buffers)[np.argsort(rt.order)]
-    if momentum == 0.0:
-        # bit-for-bit in fp32 after a FULL multigraph cycle
-        np.testing.assert_array_equal(wl, np.asarray(sf.w))
-        np.testing.assert_array_equal(bl, bf)
-        assert losses_l == losses_f
-    else:
-        # momentum: FMA fusion of momentum*mu+g differs across layouts
-        np.testing.assert_allclose(wl, np.asarray(sf.w),
-                                   rtol=1e-6, atol=1e-6)
-        np.testing.assert_allclose(bl, bf, rtol=1e-6, atol=1e-6)
-        np.testing.assert_allclose(losses_l, losses_f, rtol=1e-6)
+    # bit-for-bit in fp32 after a FULL multigraph cycle, momentum
+    # included: `optim.sgd`/`flat_sgd` pin the FMA-contraction sites of
+    # the momentum update (fl/flat.py `pin_f32`), so the packed and
+    # per-leaf layouts compute identical bits.
+    np.testing.assert_array_equal(wl, np.asarray(sf.w))
+    np.testing.assert_array_equal(bl, bf)
+    assert losses_l == losses_f
 
 
 def test_flat_cycle_aggregators_agree():
@@ -307,19 +303,18 @@ def test_trainer_flat_matches_legacy():
 
 @pytest.mark.slow
 def test_trainer_flat_matches_legacy_momentum():
-    """momentum>0 end-to-end cycle equivalence (flat_sgd vs sgd): the
-    momentum path is allowed a few ulp per round (XLA FMA-fuses
-    `momentum*mu + g` differently for packed vs per-leaf layouts), so
-    the curves match to tight tolerance rather than bit-for-bit."""
+    """momentum>0 end-to-end cycle equivalence (flat_sgd vs sgd),
+    bit-for-bit: the FMA-contraction sites of the momentum update are
+    pinned (fl/flat.py `pin_f32`), so the packed and per-leaf layouts
+    produce identical curves — no ulp allowance anymore."""
     from repro.fl.trainer import FLConfig, run_fl
     base = dict(dataset="femnist", network="gaia", topology="multigraph",
                 rounds=4, eval_every=2, samples_per_silo=16, batch_size=4,
                 lr=0.05, momentum=0.9, seed=5)
     flat = run_fl(FLConfig(runtime="flat", **base))
     legacy = run_fl(FLConfig(runtime="legacy", **base))
-    np.testing.assert_allclose(flat.round_losses, legacy.round_losses,
-                               rtol=1e-5, atol=1e-7)
+    assert flat.round_losses == legacy.round_losses
     assert flat.eval_rounds == legacy.eval_rounds
-    np.testing.assert_allclose(flat.eval_accs, legacy.eval_accs, atol=1e-3)
+    assert flat.eval_accs == legacy.eval_accs
     # both runtimes share the same TimingPlan wall-clock axis exactly
     assert flat.cycle_times_ms == legacy.cycle_times_ms

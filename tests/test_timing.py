@@ -11,12 +11,21 @@
   * ring tour: 2-silo networks work, non-Hamiltonian graphs raise
     instead of crashing with IndexError;
   * cyclic plans (static/star/ring/sampled) match the scalar
-    `delay.py` implementations they vectorize.
+    `delay.py` implementations they vectorize;
+  * batched TimingGrid == per-cell scalar/array paths bit-for-bit
+    (paper cells + property-tested random cells), and the batched
+    sweep == the per-cell oracle sweep;
+  * full-horizon MATCHA: vectorized per-round times == the per-graph
+    oracle, plans are counter-seeded (reproducible across processes
+    and call orders), and for rounds > 512 the trainer's wall-clock
+    total == the simulator's report total exactly (the old tiled
+    512-round period made them diverge).
 """
 
 import numpy as np
 import pytest
 
+from _hyp_compat import given, settings, st  # hypothesis or local fallback
 from repro.core import parsing, timing
 from repro.core.delay import (FEMNIST, WORKLOADS, MultigraphDelayTracker,
                               directed_delay_ms, graph_pair_delays,
@@ -314,6 +323,175 @@ def test_sampled_plan_tiles():
     assert times.shape == (40,)
     np.testing.assert_array_equal(times[:16], times[16:32])
     assert plan.isolated_per_round(40).sum() == 0
+
+
+# ---------------------------------------------------------------------------
+# full-horizon MATCHA: vectorized times, deterministic plans, and the
+# trainer-total == report-total identity past the old 512-round period
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("topo", ["matcha", "matcha_plus"])
+@pytest.mark.parametrize("netname", ["gaia", "geant"])
+def test_sampled_cycle_times_match_per_graph_oracle(topo, netname):
+    """`timing.sampled_cycle_times` (one array program over the whole
+    horizon) == the scalar `static_cycle_time(round_graph(k))` oracle,
+    bit-for-bit, on both the complete-graph and physical-graph bases."""
+    from repro.core.topology import build_topology
+
+    net = get_network(netname)
+    design = build_topology(topo, net, FEMNIST, seed=0)
+    rounds = 150
+    vec = timing.sampled_cycle_times(design, net, FEMNIST, rounds)
+    ref = np.array([timing.static_cycle_time(net, FEMNIST,
+                                             design.round_graph(k))
+                    for k in range(rounds)])
+    np.testing.assert_array_equal(vec, ref)
+
+
+def test_sampled_cycle_times_hetero_capacity_path():
+    """Non-uniform link capacities take the general (two-direction)
+    path; it must equal the oracle bit-for-bit too."""
+    from repro.core.topology import matcha_topology
+
+    net = _tiny_net(6, hetero=True)
+    design = matcha_topology(net, FEMNIST, seed=3)
+    rounds = 80
+    vec = timing.sampled_cycle_times(design, net, FEMNIST, rounds)
+    ref = np.array([timing.static_cycle_time(net, FEMNIST,
+                                             design.round_graph(k))
+                    for k in range(rounds)])
+    np.testing.assert_array_equal(vec, ref)
+
+
+def test_matcha_plan_deterministic_and_order_independent():
+    """Counter-based activation: round_graph(k) is a pure function of
+    (seed, k) — same bits across fresh designs and call orders."""
+    from repro.core.topology import matcha_topology
+
+    d1 = matcha_topology(GAIA, FEMNIST, seed=7)
+    d2 = matcha_topology(GAIA, FEMNIST, seed=7)
+    other = matcha_topology(GAIA, FEMNIST, seed=8)
+    # reversed call order on d2 must not perturb anything
+    assert d1.round_graph(3) == d2.round_graph(3)
+    assert d2.round_graph(0) == d1.round_graph(0)
+    assert d1.round_graph(3) == d2.round_graph(3)
+    np.testing.assert_array_equal(d1.activation_matrix(50),
+                                  d2.activation_matrix(50))
+    assert (d1.activation_matrix(200) != other.activation_matrix(200)).any()
+    # single-round draws agree with the batched matrix
+    for k in (0, 1, 49):
+        np.testing.assert_array_equal(d1.activation(k),
+                                      d1.activation_matrix(50)[k])
+
+
+def test_matcha_trainer_total_equals_report_total_past_512():
+    """Regression for the tiled 512-round period: for rounds > 512 the
+    trainer's wall-clock axis (the TimingPlan `make_round_schedule`
+    returns, summed exactly as `run_fl` does) and the report that
+    `simulate` emits for the same config are the SAME number — every
+    round is sampled, nothing is tiled."""
+    from repro.fl import dpasgd
+
+    rounds = 520
+    for topo in ("matcha", "matcha_plus"):
+        plan, tplan = dpasgd.make_round_schedule(topo, GAIA, FEMNIST,
+                                                 rounds=rounds, seed=0)
+        cycle = tplan.cycle_times(rounds)
+        trainer_total = float(np.sum(cycle)) / 1e3
+        trainer_mean = float(np.mean(cycle))
+        rep = simulate(topo, GAIA, FEMNIST, num_rounds=rounds, seed=0)
+        assert trainer_total == rep.total_time_s
+        assert trainer_mean == rep.mean_cycle_ms
+        # and the report the trainer embeds is the same object's report
+        own = tplan.report(rounds)
+        assert own.total_time_s == rep.total_time_s
+        # the RoundPlan trains on the same activation the plan timed
+        assert plan.num_rounds_cycle == rounds
+
+
+# ---------------------------------------------------------------------------
+# batched timing grid == per-cell paths, bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+def _grid_vs_cells(plans, rounds):
+    grid = timing.build_timing_grid(plans)
+    mat = grid.cycle_time_matrix(rounds)
+    for c, plan in enumerate(plans):
+        np.testing.assert_array_equal(mat[c], plan.cycle_times(rounds),
+                                      err_msg=f"cell {c}: {plan.topology}/"
+                                              f"{plan.network}/"
+                                              f"{plan.workload}")
+    for rep, plan in zip(grid.reports(rounds), plans):
+        assert rep == plan.report(rounds)
+
+
+def test_grid_matches_per_cell_paper_cells():
+    """All fast-tier paper recurrence cells + a cyclic cell stacked in
+    one grid == each cell's own scalar/array path, bit-for-bit (the
+    per-cell paths are oracle-checked against the dict tracker in the
+    tests above, so this chains to the dict oracle)."""
+    plans = []
+    for netname in ("gaia", "amazon", "geant"):
+        net = get_network(netname)
+        for wlname in sorted(WORKLOADS):
+            plans.append(timing.multigraph_timing_plan(
+                net, WORKLOADS[wlname], t=5))
+    plans.append(timing.star_timing_plan(GAIA, FEMNIST))
+    plans.append(timing.make_timing_plan("matcha", GAIA, FEMNIST,
+                                         sample_rounds=600))
+    _grid_vs_cells(plans, 600)
+
+
+@pytest.mark.slow
+def test_grid_matches_per_cell_paper_cells_large():
+    """The full 15-cell paper grid (exodus/ebone included), 6,400
+    rounds — the sweep's exact workload."""
+    plans = [timing.multigraph_timing_plan(get_network(n), WORKLOADS[w],
+                                           t=5)
+             for n in ("gaia", "amazon", "geant", "exodus", "ebone")
+             for w in sorted(WORKLOADS)]
+    _grid_vs_cells(plans, 6400)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_grid_matches_per_cell_random_cells(seed):
+    """Property: grids over random heterogeneous nets, random overlays
+    and random t stay bit-identical to the per-cell paths (covers both
+    the scalar SMALL_E twin and the array path, ragged S and E)."""
+    rng = np.random.default_rng(seed)
+    plans = []
+    for _ in range(rng.integers(2, 5)):
+        n = int(rng.integers(3, 9))
+        net = _tiny_net(n, latency=float(rng.uniform(1.0, 30.0)),
+                        hetero=bool(rng.integers(0, 2)))
+        pairs = {(i, (i + 1) % n) if i < (i + 1) % n else ((i + 1) % n, i)
+                 for i in range(n)}
+        extra = [(i, j) for i in range(n) for j in range(i + 1, n)
+                 if rng.random() < 0.3]
+        overlay = make_graph(n, list(pairs) + extra)
+        plans.append(timing.multigraph_timing_plan(
+            net, FEMNIST, t=int(rng.integers(2, 7)), overlay=overlay))
+    rounds = int(rng.integers(50, 400))
+    _grid_vs_cells(plans, rounds)
+
+
+def test_sweep_batched_equals_per_cell():
+    """`run_sweep(batched=True)` (one TimingGrid) == the per-cell
+    oracle sweep, report-for-report."""
+    from repro.core import sweep
+
+    cfg = sweep.SweepConfig(
+        topologies=("star", "matcha", "ring", "multigraph"),
+        networks=("gaia",), workloads=("femnist",),
+        t_values=(3, 5), num_rounds=700)
+    batched = sweep.run_sweep(cfg, batched=True)
+    oracle = sweep.run_sweep(cfg, batched=False)
+    assert len(batched) == len(oracle) == 5
+    for b, o in zip(batched, oracle):
+        assert b.report == o.report
 
 
 def test_sweep_driver_quick_grid():
