@@ -12,9 +12,15 @@ workload two ways:
 
 Asserts bit-for-bit equality of the per-round cycle times (the dict
 tracker is the equivalence oracle) and writes rows + the speedup to
-BENCH_sim.json. A final row times the batched `timing.TimingGrid`
-(every cell advanced in ONE stacked array program — the sweep's path)
-against the summed per-cell evals, exact-checked row-for-row.
+BENCH_sim.json. A `sim/grid_batched` row times the batched
+`timing.TimingGrid` (every cell advanced in ONE stacked array program —
+the sweep's path) against the summed per-cell evals, exact-checked
+row-for-row. A final `design/batched_construct` row times the shared
+construction path (`repro.design.batched`: per-network artifact
+sharing + lazy sampled plans) against the legacy per-cell eager
+construction on the full sweep grid, asserting report-for-report
+bit-exactness and recording the construction-phase and end-to-end
+speedups (acceptance target: construction >= 5x).
 """
 
 from __future__ import annotations
@@ -129,8 +135,63 @@ def run(quick: bool = False, t: int = 5):
     rows.append(("sim/speedup_summary", 0.0,
                  f"grid={agg:.0f}x worst_cell={worst:.0f}x "
                  f"target>=100x@{NUM_ROUNDS}r {verdict}"))
+    rows.append(_batched_construct_row(networks, workloads, num_rounds))
     _write_json(rows)
     return rows
+
+
+def _batched_construct_row(networks, workloads, num_rounds):
+    """`design/batched_construct`: shared vs legacy construction on the
+    full sweep grid (all 7 paper topologies), bit-exact.
+
+    Construction is the phase `sweep.build_sweep_plans` times: the
+    legacy path rebuilds every artifact per cell and materializes the
+    MATCHA horizons eagerly; the shared path builds through one
+    `DesignContext` per network with lazy sampled plans, so its
+    construction is the discrete design work only and the horizon
+    lands in the evaluation phase (where the factorized shared sampler
+    makes it cheaper too — the end-to-end ratio is recorded alongside
+    so the split cannot hide a regression).
+    """
+    from repro.core import sweep as sweepmod
+
+    cfg = sweepmod.SweepConfig(networks=tuple(networks),
+                               workloads=tuple(workloads),
+                               num_rounds=num_rounds)
+
+    def construct_and_eval(shared):
+        t0 = time.perf_counter()
+        plans, _ = sweepmod.build_sweep_plans(cfg, shared=shared)
+        t_construct = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for p in plans:
+            if p.kind == "cyclic":
+                p.period()          # lazy horizons materialize here
+        reports = timing.build_timing_grid(plans).reports(cfg.num_rounds)
+        return t_construct * 1e3, (time.perf_counter() - t0) * 1e3, reports
+
+    legacy_c = shared_c = np.inf
+    legacy_e = shared_e = np.inf
+    ref = cmp = None
+    for _ in range(2):                  # min-of-2: legacy is slow
+        c, e, ref = construct_and_eval(shared=False)
+        legacy_c, legacy_e = min(legacy_c, c), min(legacy_e, e)
+        c, e, cmp = construct_and_eval(shared=True)
+        shared_c, shared_e = min(shared_c, c), min(shared_e, e)
+    exact = ref == cmp
+    assert exact, "shared construction != legacy construction reports"
+    speedup = legacy_c / shared_c
+    total = (legacy_c + legacy_e) / (shared_c + shared_e)
+    verdict = (f"pass={speedup >= 5}" if num_rounds == NUM_ROUNDS
+               else "pass=n/a(quick)")
+    return (f"design/batched_construct_{num_rounds}r/{len(ref)}cells",
+            shared_c * 1e3,
+            f"legacy_construct_ms={legacy_c:.0f} "
+            f"shared_construct_ms={shared_c:.0f} construct={speedup:.1f}x "
+            f"legacy_total_ms={legacy_c + legacy_e:.0f} "
+            f"shared_total_ms={shared_c + shared_e:.0f} "
+            f"end_to_end={total:.1f}x exact_match={exact} "
+            f"target>=5x@{NUM_ROUNDS}r {verdict}")
 
 
 def _write_json(rows):

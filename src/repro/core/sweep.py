@@ -11,16 +11,21 @@ statistics) as ONE command:
 
 Every cell is a `timing.TimingPlan` (`core/timing.py`) — the same
 object the simulator and the FL trainer consume — so the tables are
-single-sourced with the training wall-clock axis. Evaluation is
-batched: all multigraph recurrence cells advance together in ONE
-`timing.TimingGrid` array program instead of per-cell Python transient
-loops, and MATCHA cells sample their FULL horizon (no tiled 512-round
+single-sourced with the training wall-clock axis. Both phases are
+batched: CONSTRUCTION goes through `repro.design.batched` (one
+`DesignContext` per network sharing nominal delay matrices,
+Christofides ring graphs, matching decompositions and activation
+tables across cells; MATCHA plans are lazy, so the horizon is NOT
+materialized here), and EVALUATION advances all multigraph recurrence
+cells together in ONE `timing.TimingGrid` array program while sampled
+cells materialize their full horizon through the shared factorized
+sampler. MATCHA cells sample their FULL horizon (no tiled 512-round
 period), so the sweep's totals equal the trainer's totals for the same
-config by construction. Expensive per-(net, workload) artifacts (the
-Christofides ring overlay) are built once and shared between the RING
-baseline and the multigraph cells. The per-cell path remains available
-as the equivalence oracle (``batched=False`` /
-``python -m repro.core.sweep --check``).
+config by construction. The per-cell, shared-nothing path remains
+available as the equivalence oracle (``batched=False`` /
+``shared=False`` / ``python -m repro.core.sweep --check``), and every
+cell reports its ``construct_ms`` / ``eval_ms`` split (printed, and in
+``--json``).
 """
 
 from __future__ import annotations
@@ -34,6 +39,7 @@ from repro.core import timing
 from repro.core.delay import WORKLOADS
 from repro.core.timing import CycleTimeReport
 from repro.core.topology import ring_topology
+from repro.design import batched as design_batched
 from repro.networks.zoo import NETWORKS, get_network
 
 PAPER_TOPOLOGIES = ("star", "matcha", "matcha_plus", "mst", "dmbst",
@@ -54,71 +60,115 @@ class SweepConfig:
 
 @dataclasses.dataclass(frozen=True)
 class SweepCell:
-    """One grid cell: the report plus how long its plan took to build."""
+    """One grid cell: the report plus its construction/evaluation split."""
 
     report: CycleTimeReport
     t: int | None           # multigraph t, None for baselines
     num_silos: int
-    eval_ms: float          # plan construction (reports are batched)
+    construct_ms: float     # plan construction (graph algorithms + arrays)
+    eval_ms: float          # evaluation (horizon materialization + grid)
 
     def row(self) -> dict:
         d = self.report.row()
         d.update(t=self.t, num_silos=self.num_silos,
+                 construct_ms=round(self.construct_ms, 3),
                  eval_ms=round(self.eval_ms, 3))
         return d
 
 
-def build_sweep_plans(cfg: SweepConfig) -> tuple[list[timing.TimingPlan],
-                                                 list[dict]]:
-    """Construct one TimingPlan per grid cell (no evaluation yet).
+def build_sweep_plans(cfg: SweepConfig, shared: bool = True
+                      ) -> tuple[list[timing.TimingPlan], list[dict]]:
+    """Construct one TimingPlan per grid cell (no evaluation).
+
+    ``shared=True`` (default) builds through one
+    `design.batched.DesignContext` per network — nominal delay
+    matrices, ring graphs, matching decompositions and activation
+    tables are computed once and shared by every cell that provably
+    needs identical bits, and sampled (MATCHA) plans stay LAZY so no
+    horizon is materialized during construction. ``shared=False`` is
+    the legacy per-cell path (each cell rebuilds everything, sampled
+    horizons materialized eagerly) — the construction oracle for
+    `--check`, the tests and the `design/batched_construct` bench row.
 
     Returns the plans plus per-cell metadata ``{t, num_silos,
     build_ms}`` in the same order.
     """
+    ctor = design_batched.SweepConstructor() if shared else None
     plans: list[timing.TimingPlan] = []
     meta: list[dict] = []
     for net_name in cfg.networks:
         net = get_network(net_name)
         for wl_name in cfg.workloads:
             wl = WORKLOADS[wl_name]
-            # Christofides overlay shared by ring + every multigraph t.
-            overlay = (ring_topology(net, wl).graph
-                       if ("ring" in cfg.topologies
-                           or "multigraph" in cfg.topologies) else None)
+            overlay = None
+            if not shared and ("ring" in cfg.topologies
+                               or "multigraph" in cfg.topologies):
+                # Christofides overlay shared by ring + every
+                # multigraph t (the one dedup the legacy path had).
+                overlay = ring_topology(net, wl).graph
             for topo in cfg.topologies:
                 ts: tuple[int | None, ...] = (
                     cfg.t_values if topo == "multigraph" else (None,))
                 for t in ts:
                     t0 = time.perf_counter()
-                    plans.append(timing.make_timing_plan(
-                        topo, net, wl, t=(t if t is not None else 5),
-                        seed=cfg.seed,
-                        sample_rounds=cfg.num_rounds,
-                        overlay=(overlay if topo in ("ring", "multigraph")
-                                 else None)))
+                    if shared:
+                        plan = ctor.make_plan(
+                            topo, net, wl, t=(t if t is not None else 5),
+                            seed=cfg.seed, sample_rounds=cfg.num_rounds)
+                    else:
+                        plan = timing.make_timing_plan(
+                            topo, net, wl, t=(t if t is not None else 5),
+                            seed=cfg.seed, sample_rounds=cfg.num_rounds,
+                            overlay=(overlay
+                                     if topo in ("ring", "multigraph")
+                                     else None))
+                        if plan.kind == "cyclic":
+                            plan.period()   # legacy: materialize eagerly
+                    plans.append(plan)
                     meta.append(dict(
                         t=t, num_silos=net.num_silos,
                         build_ms=(time.perf_counter() - t0) * 1e3))
     return plans, meta
 
 
-def run_sweep(cfg: SweepConfig, batched: bool = True) -> list[SweepCell]:
+def run_sweep(cfg: SweepConfig, batched: bool = True,
+              shared: bool = True) -> list[SweepCell]:
     """Evaluate the whole grid; one TimingPlan per cell.
 
     ``batched=True`` (default) evaluates every recurrence cell in one
     `TimingGrid` array program; ``batched=False`` steps each cell's own
     per-cell path — the equivalence oracle the batched mode is tested
     against (bit-for-bit, `--check` / tests/test_timing.py).
+    ``shared`` selects the construction path (see `build_sweep_plans`).
     """
-    plans, meta = build_sweep_plans(cfg)
+    plans, meta = build_sweep_plans(cfg, shared=shared)
+    eval_ms = [0.0] * len(plans)
+    # Materialize the lazy sampled horizons per cell (timed per cell —
+    # this is the sampled cells' evaluation work).
+    for c, plan in enumerate(plans):
+        if plan.kind == "cyclic":
+            t0 = time.perf_counter()
+            plan.period()
+            eval_ms[c] += (time.perf_counter() - t0) * 1e3
     if batched:
         grid = timing.build_timing_grid(plans)
+        t0 = time.perf_counter()
         reports = grid.reports(cfg.num_rounds)
+        grid_ms = (time.perf_counter() - t0) * 1e3
+        # The recurrence cells advance as ONE array program; their
+        # shared wall-clock is attributed equally across them.
+        rec = [c for c, p in enumerate(plans) if p.kind == "recurrence"]
+        for c in rec:
+            eval_ms[c] += grid_ms / len(rec)
     else:
-        reports = [p.report(cfg.num_rounds) for p in plans]
+        reports = []
+        for c, plan in enumerate(plans):
+            t0 = time.perf_counter()
+            reports.append(plan.report(cfg.num_rounds))
+            eval_ms[c] += (time.perf_counter() - t0) * 1e3
     return [SweepCell(report=rep, t=m["t"], num_silos=m["num_silos"],
-                      eval_ms=m["build_ms"])
-            for rep, m in zip(reports, meta)]
+                      construct_ms=m["build_ms"], eval_ms=e)
+            for rep, m, e in zip(reports, meta, eval_ms)]
 
 
 # ---------------------------------------------------------------------------
@@ -182,22 +232,31 @@ def format_table3(cells: list[SweepCell]) -> str:
 
 
 def consistency_check(cfg: SweepConfig) -> None:
-    """Assert batched == per-cell reports (bit-for-bit) on ``cfg``,
-    plus trainer-total == report-total for a MATCHA schedule longer
-    than the old 512-round tiled period. Raises on any mismatch.
+    """Assert the batched paths == the per-cell oracles, bit-for-bit:
 
-    Plans are built ONCE and evaluated through both paths, so the
-    check compares the two evaluation programs on identical plan
-    objects (plan construction is the dominant sweep cost)."""
-    plans, _ = build_sweep_plans(cfg)
+    * shared construction (`design.batched`, incl. the factorized
+      MATCHA sampler) == legacy per-cell construction;
+    * batched `TimingGrid` evaluation — with AND without per-cell
+      retirement — == per-cell evaluation;
+    * MATCHA trainer total == report total past the old 512-round
+      tiled period.
+
+    Raises on any mismatch."""
+    plans, _ = build_sweep_plans(cfg, shared=True)
+    legacy, _ = build_sweep_plans(cfg, shared=False)
     grid = timing.build_timing_grid(plans)
     batched = grid.reports(cfg.num_rounds)
-    oracle = [p.report(cfg.num_rounds) for p in plans]
-    for b, o in zip(batched, oracle):
+    no_retire = grid.reports(cfg.num_rounds, retire=False)
+    oracle = [p.report(cfg.num_rounds) for p in legacy]
+    for b, nr, o in zip(batched, no_retire, oracle):
         if b != o:
             raise AssertionError(
-                f"batched != per-cell on {o.topology}/{o.network}/"
+                f"shared/batched != per-cell on {o.topology}/{o.network}/"
                 f"{o.workload}: {b} vs {o}")
+        if nr != o:
+            raise AssertionError(
+                f"non-retiring grid != per-cell on {o.topology}/"
+                f"{o.network}/{o.workload}: {nr} vs {o}")
     if any(t.startswith("matcha") for t in cfg.topologies):
         from repro.core.simulator import simulate
         from repro.fl import dpasgd
@@ -215,7 +274,8 @@ def consistency_check(cfg: SweepConfig) -> None:
             raise AssertionError(
                 f"matcha trainer total {trainer_total!r} != report total "
                 f"{report_total!r} at rounds={rounds}")
-    print(f"consistency_check OK: {len(batched)} cells bit-exact, "
+    print(f"consistency_check OK: {len(batched)} cells bit-exact "
+          f"(shared construction, batched grid, retirement on+off), "
           f"matcha trainer==report@{max(520, cfg.num_rounds)}r")
 
 
@@ -233,7 +293,8 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized subset (gaia+geant, femnist)")
     ap.add_argument("--check", action="store_true",
-                    help="consistency mode: assert batched == per-cell "
+                    help="consistency mode: assert shared construction "
+                         "and batched evaluation == the per-cell oracles "
                          "bit-for-bit and MATCHA trainer==report, then "
                          "exit")
     ap.add_argument("--json", default="",
@@ -260,10 +321,10 @@ def main(argv: list[str] | None = None) -> None:
     print(format_table1(cells))
     print()
     print(format_table3(cells))
-    build = sum(c.eval_ms for c in cells) / 1e3
+    build = sum(c.construct_ms for c in cells) / 1e3
+    ev = sum(c.eval_ms for c in cells) / 1e3
     print(f"\n{len(cells)} cells in {wall:.2f}s "
-          f"(plan construction {build:.2f}s, batched grid eval "
-          f"{wall - build:.2f}s)")
+          f"(plan construction {build:.2f}s, evaluation {ev:.2f}s)")
     if args.json:
         with open(args.json, "w") as f:
             json.dump([c.row() for c in cells], f, indent=1)

@@ -171,9 +171,24 @@ class TimingPlan:
     overlay: SimpleGraph | None = None
     # cyclic mode:
     period_times: np.ndarray | None = None  # (P,) f64 ms, tiled over rounds
+    #: Lazy twin of ``period_times``: a zero-arg callable producing the
+    #: (P,) period on first use. Sampled (MATCHA) plans carry a sampler
+    #: instead of an eager array so that materializing the per-round
+    #: horizon counts as EVALUATION (where the sweep's batched grid and
+    #: the shared `repro.design.batched` sampler caches live), not as
+    #: plan construction — construction is the discrete design only.
+    sampler: object = dataclasses.field(default=None, compare=False)
     # lazily-populated per-state scratch (see _recurrence_scratch)
     _cache: dict = dataclasses.field(default_factory=dict, repr=False,
                                      compare=False)
+
+    def period(self) -> np.ndarray:
+        """Materialized (P,) cyclic period (runs `sampler` on first use)."""
+        if self.period_times is not None:
+            return self.period_times
+        if "period" not in self._cache:
+            self._cache["period"] = np.asarray(self.sampler(), np.float64)
+        return self._cache["period"]
 
     @property
     def num_states(self) -> int:
@@ -204,7 +219,7 @@ class TimingPlan:
     def cycle_times(self, num_rounds: int) -> np.ndarray:
         """Per-round cycle times ``(num_rounds,)`` in ms (Eq. 4/5)."""
         if self.kind == "cyclic":
-            return _tile_to(self.period_times, num_rounds)
+            return _tile_to(self.period(), num_rounds)
         if len(self.d0) <= SMALL_E:
             # Tiny edge lists are numpy-dispatch-bound (~7 calls/round
             # on 11 floats); a scalar loop over the same IEEE ops is
@@ -228,7 +243,8 @@ class TimingPlan:
 
     def report(self, num_rounds: int) -> CycleTimeReport:
         if self.kind == "cyclic":
-            if len(self.period_times) == num_rounds:
+            period_times = self.period()
+            if len(period_times) == num_rounds:
                 # Full-horizon plan (every round sampled, e.g. MATCHA
                 # since the tiling fix): the report IS the per-round
                 # series, so total = sum and mean = sum/n — bitwise the
@@ -238,14 +254,14 @@ class TimingPlan:
                 return CycleTimeReport(
                     topology=self.topology, network=self.network,
                     workload=self.workload, num_rounds=num_rounds,
-                    mean_cycle_ms=float(self.period_times.mean()),
-                    total_time_s=float(self.period_times.sum()) / 1000.0)
+                    mean_cycle_ms=float(period_times.mean()),
+                    total_time_s=float(period_times.sum()) / 1000.0)
             # Equal-weight the sampled period (the MATCHA estimator is
             # "mean of the sampled cycle times x rounds"): a truncated
             # tiling of a period that does not divide num_rounds would
             # bias the mean toward the period's first rounds.
-            mean = (float(self.period_times.mean())
-                    if len(self.period_times) else 0.0)
+            mean = (float(period_times.mean())
+                    if len(period_times) else 0.0)
             return CycleTimeReport(
                 topology=self.topology, network=self.network,
                 workload=self.workload, num_rounds=num_rounds,
@@ -468,20 +484,25 @@ def _recurrence_taus_py(d0, lone_comp, num_rounds: int,
 # ---------------------------------------------------------------------------
 
 
-def multigraph_timing_plan(net: NetworkSpec, wl: Workload, *, t: int = 5,
-                           overlay: SimpleGraph | None = None,
-                           cap_states: int | None = CAP_STATES) -> TimingPlan:
-    """Full multigraph pipeline: overlay -> Algorithm 1 -> Algorithm 2
-    -> Eq. 4 arrays. The parsed states ride along so the training
-    RoundPlan is built from the identical schedule."""
+def multiplicity_timing_plan(net: NetworkSpec, wl: Workload,
+                             overlay: SimpleGraph,
+                             multiplicity: dict, *,
+                             name: str = "multigraph",
+                             cap_states: int | None = CAP_STATES,
+                             mg: Multigraph | None = None) -> TimingPlan:
+    """Recurrence plan for an EXPLICIT multiplicity assignment.
+
+    Algorithm 1 is one way to pick ``multiplicity``; the design search
+    (`repro.design.search`) explores the full space of assignments over
+    the overlay pairs, and both funnel through this constructor so a
+    searched candidate and the paper's hand-built multigraph are scored
+    by the identical Eq. 4 arrays.
+    """
     from repro.core import parsing
-    from repro.core.multigraph import build_multigraph
-    from repro.core.topology import ring_topology
 
-    if overlay is None:
-        overlay = ring_topology(net, wl).graph
-    mg = build_multigraph(net, wl, overlay, t=t)
-
+    if mg is None:
+        mg = Multigraph(num_nodes=overlay.num_nodes,
+                        multiplicity=dict(multiplicity))
     pairs = overlay.pairs
     num_pairs = len(pairs)
     pair_i = np.fromiter((p[0] for p in pairs), np.int64, num_pairs)
@@ -495,7 +516,7 @@ def multigraph_timing_plan(net: NetworkSpec, wl: Workload, *, t: int = 5,
     # by construction). `plan.states` lazily materializes the dict
     # states from the SAME capped multiplicities for consumers that
     # walk per-pair edge types; tests assert the two agree.
-    L = parsing.capped_multiplicities(mg.multiplicity, cap_states)
+    L = parsing.capped_multiplicities(multiplicity, cap_states)
     num_states = 1
     for n in L.values():
         num_states = math.lcm(num_states, n)
@@ -515,7 +536,7 @@ def multigraph_timing_plan(net: NetworkSpec, wl: Workload, *, t: int = 5,
     iso_count = (has_edge[None, :] & ~in_strong).sum(axis=1)
 
     return TimingPlan(
-        topology=f"multigraph(t={t})", network=net.name, workload=wl.name,
+        topology=name, network=net.name, workload=wl.name,
         num_nodes=net.num_silos, comp=comp, kind="recurrence",
         pair_i=pair_i, pair_j=pair_j, d0=d0, pair_comp=pair_comp,
         strong=strong, trans=trans, lone_comp=lone_comp,
@@ -523,13 +544,33 @@ def multigraph_timing_plan(net: NetworkSpec, wl: Workload, *, t: int = 5,
         overlay=overlay)
 
 
+def multigraph_timing_plan(net: NetworkSpec, wl: Workload, *, t: int = 5,
+                           overlay: SimpleGraph | None = None,
+                           cap_states: int | None = CAP_STATES) -> TimingPlan:
+    """Full multigraph pipeline: overlay -> Algorithm 1 -> Algorithm 2
+    -> Eq. 4 arrays. The parsed states ride along so the training
+    RoundPlan is built from the identical schedule."""
+    from repro.core.multigraph import build_multigraph
+    from repro.core.topology import ring_topology
+
+    if overlay is None:
+        overlay = ring_topology(net, wl).graph
+    mg = build_multigraph(net, wl, overlay, t=t)
+    return multiplicity_timing_plan(
+        net, wl, overlay, mg.multiplicity, name=f"multigraph(t={t})",
+        cap_states=cap_states, mg=mg)
+
+
 def _cyclic_plan(topology: str, net: NetworkSpec, wl: Workload,
-                 period_times: np.ndarray) -> TimingPlan:
+                 period_times: np.ndarray | None,
+                 sampler=None) -> TimingPlan:
     return TimingPlan(
         topology=topology, network=net.name, workload=wl.name,
         num_nodes=net.num_silos, comp=wl.compute_ms(net).astype(np.float64),
         kind="cyclic",
-        period_times=np.asarray(period_times, np.float64))
+        period_times=(None if period_times is None
+                      else np.asarray(period_times, np.float64)),
+        sampler=sampler)
 
 
 def static_timing_plan(name: str, net: NetworkSpec, wl: Workload,
@@ -713,9 +754,10 @@ def sampled_cycle_times(design, net: NetworkSpec, wl: Workload,
 
 def sampled_timing_plan(name: str, net: NetworkSpec, wl: Workload, design,
                         sample_rounds: int = 512,
-                        graphs: list[SimpleGraph] | None = None) -> TimingPlan:
-    """Per-round random topologies (MATCHA): materialize per-round
-    Eq. 5 cycle times for ``sample_rounds`` rounds.
+                        graphs: list[SimpleGraph] | None = None,
+                        sampler=None) -> TimingPlan:
+    """Per-round random topologies (MATCHA): per-round Eq. 5 cycle
+    times for ``sample_rounds`` rounds, materialized LAZILY.
 
     Callers that report over ``num_rounds`` rounds should pass
     ``sample_rounds=num_rounds`` (what `simulate`, the sweep, and
@@ -725,15 +767,24 @@ def sampled_timing_plan(name: str, net: NetworkSpec, wl: Workload, design,
     tiling is kept for callers that explicitly want the cheaper
     truncated estimator.
 
+    The plan carries a sampler closure instead of an eager array:
+    constructing a sampled plan is O(1) and the horizon is computed on
+    the first `cycle_times`/`report` call — i.e. in the sweep's
+    EVALUATION phase, alongside the batched grid. Pass ``sampler`` to
+    substitute a shared/batched computation (`repro.design.batched`
+    does); it must be bit-identical to `sampled_cycle_times`.
+
     Pass ``graphs`` to time an already-materialized per-round sequence
     (``design`` is then ignored) via the scalar per-graph path — the
     equivalence oracle for `sampled_cycle_times`.
     """
-    if graphs is None:
-        times = sampled_cycle_times(design, net, wl, sample_rounds)
-    else:
+    if graphs is not None:
         times = np.array([static_cycle_time(net, wl, g) for g in graphs])
-    return _cyclic_plan(name, net, wl, times)
+        return _cyclic_plan(name, net, wl, times)
+    if sampler is None:
+        def sampler(design=design, net=net, wl=wl, rounds=sample_rounds):
+            return sampled_cycle_times(design, net, wl, rounds)
+    return _cyclic_plan(name, net, wl, None, sampler=sampler)
 
 
 # ---------------------------------------------------------------------------
@@ -774,13 +825,15 @@ class TimingGrid:
     def num_cells(self) -> int:
         return len(self.plans)
 
-    def cycle_time_matrix(self, num_rounds: int) -> np.ndarray:
+    def cycle_time_matrix(self, num_rounds: int,
+                          retire: bool = True) -> np.ndarray:
         """(num_cells, num_rounds) f64 ms — every cell's tau series."""
         out = np.empty((len(self.plans), num_rounds), np.float64)
         if self.rec_rows:
             rec = _grid_recurrence_taus(
                 self.d0, self.pair_comp, self.strong, self.trans,
-                self.lone_comp, self.num_states, num_rounds)
+                self.lone_comp, self.num_states, num_rounds,
+                retire=retire)
             for row, c in enumerate(self.rec_rows):
                 out[c] = rec[row]
         for c, plan in enumerate(self.plans):
@@ -788,11 +841,12 @@ class TimingGrid:
                 out[c] = plan.cycle_times(num_rounds)
         return out
 
-    def reports(self, num_rounds: int) -> list[CycleTimeReport]:
+    def reports(self, num_rounds: int,
+                retire: bool = True) -> list[CycleTimeReport]:
         """One CycleTimeReport per plan, recurrence rows batched."""
         rec_taus = (_grid_recurrence_taus(
             self.d0, self.pair_comp, self.strong, self.trans,
-            self.lone_comp, self.num_states, num_rounds)
+            self.lone_comp, self.num_states, num_rounds, retire=retire)
             if self.rec_rows else None)
         row_of = {c: row for row, c in enumerate(self.rec_rows)}
         out = []
@@ -866,7 +920,8 @@ def _snapshot_hashes(d_cur: np.ndarray, d_prev: np.ndarray,
 
 
 def _grid_recurrence_taus(d0, pair_comp, strong, trans, lone_comp,
-                          num_states, num_rounds: int) -> np.ndarray:
+                          num_states, num_rounds: int,
+                          retire: bool = True) -> np.ndarray:
     """All-cells Eq. 4/5: one vectorized round step for the whole grid.
 
     Bit-for-bit identical to per-cell `_recurrence_taus`: every branch
@@ -874,90 +929,114 @@ def _grid_recurrence_taus(d0, pair_comp, strong, trans, lone_comp,
     branch values computed with the per-cell formulas), the Eq. 5 max
     reduces over the same strong set, and the orbit extrapolation fires
     only on an exact-verified snapshot recurrence, after which the
-    remaining rounds of that cell are a deterministic replay. The live
-    loop runs until every cell has locked an orbit (or rounds run out),
-    so the whole grid costs max-transient vector steps rather than
-    sum-of-transients Python loops.
+    remaining rounds of that cell are a deterministic replay.
+
+    ``retire=True`` (default) drops a row from the stacked buffers the
+    round its orbit locks and tiles its tail immediately, so one
+    pathological cell with a long transient no longer forces full-grid
+    stepping — the live loop narrows to the cells still in transient.
+    ``retire=False`` keeps every row stepping until the slowest cell
+    locks (the original behaviour); both paths produce identical bits
+    because a locked cell's continued stepping IS the tiled replay.
     """
     num_cells, e_max = d0.shape
-    ar = np.arange(num_cells)
     rng = np.random.default_rng(0x5EED)
     weights = rng.integers(0, 2**63, e_max, np.uint64) * np.uint64(2) \
         + np.uint64(1)
     taus = np.empty((num_cells, num_rounds), np.float64)
+    act = np.arange(num_cells)           # original ids of the live rows
     d_cur = d0.copy()
     d_prev = d0.copy()
     prev_tau = np.zeros(num_cells)
-    hist: list[np.ndarray] = []          # hist[k] = d after round k
+    # hist[c][k] = cell c's d_cur after round k (appended while live)
+    hist: list[list[np.ndarray]] = [[] for _ in range(num_cells)]
     seen: list[dict[int, list[int]]] = [dict() for _ in range(num_cells)]
     done = np.zeros(num_cells, bool)
     period = np.zeros(num_cells, np.int64)
+    locked_at = np.full(num_cells, -1, np.int64)
     k = 0
-    while k < num_rounds:
-        s = k % num_states                            # (C,) phases
+    while k < num_rounds and act.size:
+        s = k % num_states[act]                       # live-row phases
+        st = strong[act, s]
         if k == 0:
-            st = strong[ar, s]
             tau = np.max(np.where(st, d_cur, -np.inf), axis=1)
         else:
-            code = trans[ar, s]
-            ws = np.maximum(pair_comp, d_cur - d_prev)
+            code = trans[act, s]
+            ws = np.maximum(pair_comp[act], d_cur - d_prev)
             d_next = np.where(
                 code == T_SS, d_cur, np.where(
                     code == T_WW, prev_tau[:, None] + d_cur, np.where(
                         code == T_SW, prev_tau[:, None], ws)))
             d_prev, d_cur = d_cur, d_next
-            st = strong[ar, s]
             tau = np.max(np.where(st, d_cur, -np.inf), axis=1)
-        tau = np.maximum(tau, lone_comp[ar, s])
-        taus[:, k] = tau
+        tau = np.maximum(tau, lone_comp[act, s])
+        taus[act, k] = tau
         prev_tau = tau
-        if not done.all():
-            hist.append(d_cur.copy())
-            h = _snapshot_hashes(d_cur, d_prev, tau, s, weights)
-            for c in np.flatnonzero(~done):
-                cands = seen[c].setdefault(int(h[c]), [])
-                for k0 in cands:
-                    if (k - k0) % num_states[c]:
-                        continue           # phase mismatch (hash lied)
-                    prev0 = hist[k0 - 1][c] if k0 else d0[c]
-                    if (taus[c, k] == taus[c, k0]
-                            and np.array_equal(hist[k][c], hist[k0][c])
-                            and np.array_equal(hist[k - 1][c] if k
-                                               else d0[c], prev0)):
-                        done[c] = True
-                        period[c] = k - k0
-                        break
-                else:
-                    cands.append(k)
+        h = _snapshot_hashes(d_cur, d_prev, tau, s, weights)
+        newly: list[int] = []
+        for row, c in enumerate(act):
+            if done[c]:
+                continue
+            hist[c].append(d_cur[row].copy())
+            cands = seen[c].setdefault(int(h[row]), [])
+            for k0 in cands:
+                if (k - k0) % num_states[c]:
+                    continue               # phase mismatch (hash lied)
+                prev0 = hist[c][k0 - 1] if k0 else d0[c]
+                if (taus[c, k] == taus[c, k0]
+                        and np.array_equal(hist[c][k], hist[c][k0])
+                        and np.array_equal(hist[c][k - 1] if k
+                                           else d0[c], prev0)):
+                    done[c] = True
+                    period[c] = k - k0
+                    locked_at[c] = k
+                    newly.append(row)
+                    break
+            else:
+                cands.append(k)
         k += 1
-        if done.all():
+        if retire:
+            if newly:
+                keep = np.ones(act.size, bool)
+                keep[newly] = False
+                act = act[keep]
+                d_cur = d_cur[keep]
+                d_prev = d_prev[keep]
+                prev_tau = prev_tau[keep]
+        elif done.all():
             break
-    if k < num_rounds:
-        # every cell locked an exact orbit at or before round k-1:
-        # the rest of each row is a tiled replay.
-        for c in range(num_cells):
+    # Locked rows: the rest of each row is a tiled replay of its exact
+    # orbit. Retired rows tile from their own lock round; in the
+    # non-retiring mode every locked row kept stepping to the common
+    # exit round k, so tiling starts there (same bits either way).
+    for c in np.flatnonzero(locked_at >= 0):
+        start = int(locked_at[c]) + 1 if retire else k
+        if start < num_rounds:
             p = int(period[c])
-            taus[c, k:] = _tile_to(taus[c, k - p:k], num_rounds - k)
+            taus[c, start:] = _tile_to(taus[c, start - p:start],
+                                       num_rounds - start)
     return taus
 
 
 def make_timing_plan(topology: str, net: NetworkSpec, wl: Workload, *,
                      t: int = 5, cap_states: int | None = CAP_STATES,
                      seed: int = 0, sample_rounds: int = 512,
-                     overlay: SimpleGraph | None = None) -> TimingPlan:
-    """Uniform entry point for every topology in the paper's Table 1."""
-    from repro.core.topology import build_topology
+                     overlay: SimpleGraph | None = None,
+                     ctx=None) -> TimingPlan:
+    """Uniform entry point for every topology in the paper's Table 1.
 
-    if topology == "multigraph":
-        return multigraph_timing_plan(net, wl, t=t, overlay=overlay,
-                                      cap_states=cap_states)
-    if topology == "star":
-        return star_timing_plan(net, wl)
-    if topology == "ring":
-        return ring_timing_plan(net, wl, graph=overlay)
-    design = build_topology(topology, net, wl, **(
-        {"seed": seed} if topology.startswith("matcha") else {}))
-    if topology.startswith("matcha"):
-        return sampled_timing_plan(topology, net, wl, design,
-                                   sample_rounds=sample_rounds)
-    return static_timing_plan(topology, net, wl, design.round_graph(0))
+    Delegates to the design catalog (`repro.design.catalog`) — the
+    family object owns both construction and timing semantics; this
+    module no longer re-implements the topology branching. ``ctx`` is
+    an optional `repro.design.batched.DesignContext` sharing expensive
+    construction artifacts across cells (bit-identical output).
+    """
+    from repro.design import catalog
+
+    fam = catalog.get_family(topology, t=t, cap_states=cap_states,
+                             seed=seed, sample_rounds=sample_rounds)
+    if topology in ("ring", "multigraph"):
+        # The two overlay-driven families accept a precomputed overlay
+        # (the sweep's legacy path shares one Christofides graph).
+        return fam.timing_plan(net, wl, ctx=ctx, overlay=overlay)
+    return fam.timing_plan(net, wl, ctx=ctx)

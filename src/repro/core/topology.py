@@ -1,371 +1,34 @@
-"""Baseline topology designs: STAR, MST, delta-MBST, RING, MATCHA(+).
+"""Baseline topology designs — thin re-export shim.
 
-Each design consumes a NetworkSpec + Workload and produces, per
-communication round, the set of blocking pair exchanges. Static designs
-(STAR/MST/dMBST/RING) use the same graph every round; MATCHA samples
-matchings each round; the paper's multigraph design lives in
-multigraph.py / parsing.py and is driven by the state schedule.
-
-Edge weights used while CONSTRUCTING a topology are the congestion-free
-pair delays (degree 1): the topology is chosen before the degrees it
-induces are known. Cycle times are then evaluated with the actual
-degrees (delay.py).
+Construction moved to `repro.design.catalog`, where each design family
+now owns BOTH its construction and its timing semantics (closing the
+old split between this module and `core/timing.py` — DESIGN.md §12).
+Every public name that used to live here is re-exported, so existing
+imports (`from repro.core.topology import ring_topology`, ...) keep
+working unchanged.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Protocol
-
-import networkx as nx
-import numpy as np
-
-from repro.core.delay import Workload, pair_delay_ms
-from repro.core.graph import Pair, SimpleGraph, canon, make_graph
-from repro.networks.zoo import NetworkSpec
-
-
-def nominal_delay_matrix(net: NetworkSpec, wl: Workload) -> np.ndarray:
-    """Congestion-free (degree-1) pair delay between every silo pair.
-
-    Array form of ``pair_delay_ms(..., deg=ones)`` over the whole matrix
-    (same elementwise Eq. 3 ops, so bit-identical weights feed the
-    MST/dMBST/ring constructions): the old N^2 scalar loop dominated
-    topology construction on exodus/ebone.
-    """
-    from repro.core.timing import directed_delay_matrix
-
-    n = net.num_silos
-    ones = np.ones(n, dtype=np.int64)
-    d = directed_delay_matrix(net, wl, ones, ones)
-    d = np.maximum(d, d.T)
-    np.fill_diagonal(d, 0.0)
-    return d
-
-
-def connectivity_graph(net: NetworkSpec) -> SimpleGraph:
-    """G_c: possible direct communications — complete graph over silos."""
-    n = net.num_silos
-    return make_graph(n, [(i, j) for i in range(n) for j in range(i + 1, n)])
-
-
-def physical_graph(net: NetworkSpec, k_nearest: int = 4) -> SimpleGraph:
-    """Approximate physical/underlay graph of an ISP network.
-
-    The Internet Topology Zoo publishes physical links; offline we
-    approximate them with a symmetric k-nearest-neighbour graph over the
-    latency metric (plus an MST union so it is always connected). Cloud
-    networks (gaia/amazon) are fully meshed, for which callers should use
-    connectivity_graph instead.
-    """
-    n = net.num_silos
-    lat = net.latency_ms
-    pairs: set[Pair] = set()
-    for i in range(n):
-        order = np.argsort(lat[i])
-        picked = [int(j) for j in order if j != i][:k_nearest]
-        for j in picked:
-            pairs.add(canon(i, j))
-    # Union with the latency MST to guarantee connectivity.
-    g = nx.Graph()
-    for i in range(n):
-        for j in range(i + 1, n):
-            g.add_edge(i, j, weight=float(lat[i, j]))
-    for i, j in nx.minimum_spanning_edges(g, data=False):
-        pairs.add(canon(int(i), int(j)))
-    return make_graph(n, pairs)
-
-
-class TopologyDesign(Protocol):
-    name: str
-
-    def round_graph(self, k: int) -> SimpleGraph:
-        """Active (blocking) exchanges of communication round k."""
-        ...
-
-
-@dataclasses.dataclass
-class StaticTopology:
-    name: str
-    graph: SimpleGraph
-
-    def round_graph(self, k: int) -> SimpleGraph:
-        return self.graph
-
-
-def star_topology(net: NetworkSpec, wl: Workload) -> StaticTopology:
-    """STAR [3]: orchestrator at the hub minimizing the round cycle time.
-
-    Vectorized over candidate hubs: for hub h the star degrees are 1 for
-    the leaves and N-1 for the hub, so every pair delay of every
-    candidate star is an entry of two directed-delay matrices (leaf->hub
-    with out_deg 1 / in_deg N-1, and hub->leaf reversed). Same Eq. 3
-    ops as the old per-hub scalar loop, first minimum wins on ties.
-    """
-    from repro.core.timing import directed_delay_matrix
-
-    n = net.num_silos
-    if n == 1:
-        return StaticTopology("star", make_graph(1, []))
-    ones = np.ones(n, np.int64)
-    fan = np.full(n, n - 1, np.int64)
-    off_diag = ~np.eye(n, dtype=bool)
-    d_up = directed_delay_matrix(net, wl, ones, fan)    # [leaf, hub]
-    d_dn = directed_delay_matrix(net, wl, fan, ones)    # [hub, leaf]
-    pair = np.maximum(d_up, d_dn.T)                     # [leaf, hub]
-    ct = np.max(pair, axis=0, initial=-np.inf, where=off_diag)
-    best_hub = int(np.argmin(ct))
-    return StaticTopology(
-        "star", make_graph(n, [(best_hub, i) for i in range(n) if i != best_hub]))
-
-
-def mst_topology(net: NetworkSpec, wl: Workload) -> StaticTopology:
-    """MST [72]: Prim's minimum spanning tree over nominal pair delays."""
-    d = nominal_delay_matrix(net, wl)
-    g = nx.Graph()
-    n = net.num_silos
-    for i in range(n):
-        for j in range(i + 1, n):
-            g.add_edge(i, j, weight=float(d[i, j]))
-    tree = nx.minimum_spanning_tree(g, algorithm="prim")
-    return StaticTopology("mst", make_graph(n, [canon(int(i), int(j)) for i, j in tree.edges]))
-
-
-def dmbst_topology(net: NetworkSpec, wl: Workload, delta: int = 3) -> StaticTopology:
-    """delta-MBST [58]: degree-bounded (min-bottleneck) spanning tree.
-
-    Greedy Kruskal over nominal delays with a degree cap; if the cap
-    makes a component unjoinable, the smallest-delay violating edge is
-    admitted (the same relaxation Marfoq et al. use in practice).
-    """
-    d = nominal_delay_matrix(net, wl)
-    n = net.num_silos
-    edges = sorted(
-        ((float(d[i, j]), i, j) for i in range(n) for j in range(i + 1, n)))
-    parent = list(range(n))
-
-    def find(x):
-        while parent[x] != x:
-            parent[x] = parent[parent[x]]
-            x = parent[x]
-        return x
-
-    deg = np.zeros(n, dtype=np.int64)
-    chosen: list[Pair] = []
-    # Pass 1: respect the degree bound.
-    for w, i, j in edges:
-        if len(chosen) == n - 1:
-            break
-        if find(i) != find(j) and deg[i] < delta and deg[j] < delta:
-            parent[find(i)] = find(j)
-            deg[i] += 1
-            deg[j] += 1
-            chosen.append(canon(i, j))
-    # Pass 2: if still disconnected, relax the bound minimally.
-    for w, i, j in edges:
-        if len(chosen) == n - 1:
-            break
-        if find(i) != find(j):
-            parent[find(i)] = find(j)
-            deg[i] += 1
-            deg[j] += 1
-            chosen.append(canon(i, j))
-    return StaticTopology(f"dmbst", make_graph(n, chosen))
-
-
-def ring_topology(net: NetworkSpec, wl: Workload) -> StaticTopology:
-    """RING [58]: Christofides TSP cycle over nominal pair delays.
-
-    This is also the overlay from which the paper's multigraph is built
-    (paper §4.1: "Similar to [58], we use the Christofides algorithm to
-    obtain the overlay").
-    """
-    d = nominal_delay_matrix(net, wl)
-    n = net.num_silos
-    g = nx.Graph()
-    for i in range(n):
-        for j in range(i + 1, n):
-            g.add_edge(i, j, weight=float(d[i, j]))
-    if n <= 3:
-        cycle = list(range(n)) + [0]
-    else:
-        # `traveling_salesman_problem` first completes the graph with
-        # all-pairs shortest paths, which is a pure no-op on our
-        # already-complete metric graph (verified identical tours on
-        # every paper network x workload) but costs more than the
-        # Christofides run itself — call the method directly.
-        cycle = nx.approximation.christofides(g)
-    pairs = {canon(int(cycle[i]), int(cycle[i + 1])) for i in range(len(cycle) - 1)}
-    return StaticTopology("ring", make_graph(n, pairs))
-
-
-@dataclasses.dataclass(frozen=True)
-class MatchaTopology:
-    """MATCHA [85]: matching decomposition + random activation.
-
-    The base graph is decomposed into matchings (a proper edge
-    coloring); each round every matching is activated independently
-    with probability `budget` (the communication budget C_b). MATCHA
-    runs over the connectivity graph; MATCHA(+) — Marfoq et al.'s
-    variant — runs over the (approximate) physical underlay, which is
-    why the two coincide on fully-meshed cloud networks (Table 1:
-    identical Gaia/Amazon rows) and differ on ISP topologies.
-
-    Activation draws are *counter-based*: the coin flip for (round k,
-    matching m) is a pure splitmix64-style hash of ``(seed, k, m)``, so
-    ``round_graph(k)`` is a pure function of ``(seed, k)`` —
-    reproducible across processes and call orders, and the whole
-    6,400-round activation matrix is one vectorized hash instead of
-    6,400 Generator constructions. (The old design hid a mutable RNG
-    stream in the instance, so two consumers walking the same design,
-    or the same consumer calling ``round_graph`` twice, silently
-    sampled different sequences.)
-    """
-
-    name: str
-    num_nodes: int
-    matchings: tuple[tuple[Pair, ...], ...]
-    budget: float
-    seed: int = 0
-
-    @property
-    def num_matchings(self) -> int:
-        return len(self.matchings)
-
-    def activation(self, k: int) -> np.ndarray:
-        """(M,) bool — which matchings are live in round k."""
-        return self.activation_rows(np.asarray([k]))[0]
-
-    def activation_rows(self, rounds_idx: np.ndarray) -> np.ndarray:
-        """(len(rounds_idx), M) bool activation for arbitrary rounds."""
-        u = _counter_uniform(self.seed, rounds_idx, len(self.matchings))
-        return u < self.budget
-
-    def activation_matrix(self, rounds: int) -> np.ndarray:
-        """(rounds, M) bool — the whole sampled horizon at once."""
-        return self.activation_rows(np.arange(rounds))
-
-    def round_graph(self, k: int) -> SimpleGraph:
-        act = self.activation(k)
-        pairs: list[Pair] = []
-        for live, m in zip(act, self.matchings):
-            if live:
-                pairs.extend(m)
-        return make_graph(self.num_nodes, pairs)
-
-
-def _counter_uniform(seed: int, rounds_idx: np.ndarray,
-                     num_streams: int) -> np.ndarray:
-    """Counter-based uniforms in [0, 1): ``(len(rounds_idx), M)``.
-
-    splitmix64 finalizer over a linear mix of (seed, round, stream) —
-    stateless, so any subset of rounds can be drawn in any order (or
-    all at once) with identical bits. 53-bit mantissa uniforms, same
-    construction as `numpy`'s float64 path.
-    """
-    from repro.core.timing import SPLITMIX64_CONSTANTS
-
-    p1, p2, p3 = (np.uint64(x) for x in SPLITMIX64_CONSTANTS)
-    k = np.asarray(rounds_idx, np.uint64)[:, None]
-    m = np.arange(num_streams, dtype=np.uint64)[None, :]
-    seed_mix = np.uint64((seed * SPLITMIX64_CONSTANTS[2]) % 2**64)
-    x = (seed_mix + k) * p1 + m * p2
-    x ^= x >> np.uint64(30)
-    x *= p2
-    x ^= x >> np.uint64(27)
-    x *= p3
-    x ^= x >> np.uint64(31)
-    return (x >> np.uint64(11)).astype(np.float64) * float(2.0 ** -53)
-
-
-def _round_robin_matchings(n: int) -> list[list[Pair]]:
-    """Circle-method 1-factorization of K_n: n-1 perfect matchings for
-    even n, n near-perfect matchings (one idle node each) for odd n —
-    the optimal edge coloring, built in O(n^2) without a line graph."""
-    odd = n % 2 == 1
-    m = n + 1 if odd else n          # pad odd n with a phantom node
-    rounds = m - 1
-    out: list[list[Pair]] = []
-    ring = list(range(1, m))         # node 0 fixed, the rest rotate
-    for r in range(rounds):
-        rot = ring[r:] + ring[:r]
-        stack = [0] + rot
-        pairs = []
-        for a, b in zip(stack[:m // 2], reversed(stack[m // 2:])):
-            if odd and (a == m - 1 or b == m - 1):
-                continue             # drop the phantom node's pair
-            pairs.append(canon(a, b))
-        out.append(sorted(pairs))
-    return out
-
-
-def _matching_decomposition(graph: SimpleGraph) -> list[tuple[Pair, ...]]:
-    """Edge-color the graph; each color class is a matching.
-
-    Complete graphs (MATCHA's connectivity base) take the optimal
-    circle-method 1-factorization. Everything else gets a
-    Misra–Gries-style greedy pass: scan edges densest-vertex-first and
-    give each the smallest color free at both endpoints, tracked in one
-    (N, colors) numpy availability table — O(E * Delta) array ops
-    instead of the old O(E^2) Python line-graph construction, which
-    dominated full sweeps on exodus/ebone.
-    """
-    n = graph.num_nodes
-    num_pairs = graph.num_pairs
-    if num_pairs == n * (n - 1) // 2 and n >= 2:
-        return [tuple(m) for m in _round_robin_matchings(n)]
-    if not num_pairs:
-        return []
-    deg = graph.degrees()
-    max_colors = 2 * int(deg.max()) - 1 if deg.max() else 1
-    pi = np.fromiter((p[0] for p in graph.pairs), np.int64, num_pairs)
-    pj = np.fromiter((p[1] for p in graph.pairs), np.int64, num_pairs)
-    # Densest endpoints first (the Misra–Gries fan heuristic's spirit):
-    # saturated vertices pick colors while the palette is still tight.
-    order = np.argsort(-(deg[pi] + deg[pj]), kind="stable")
-    used = np.zeros((n, max_colors), dtype=bool)
-    color = np.empty(num_pairs, dtype=np.int64)
-    for e in order:
-        i, j = pi[e], pj[e]
-        c = int(np.argmax(~(used[i] | used[j])))
-        color[e] = c
-        used[i, c] = used[j, c] = True
-    classes: dict[int, list[Pair]] = {}
-    for e, c in enumerate(color):
-        classes.setdefault(int(c), []).append(graph.pairs[e])
-    return [tuple(sorted(v)) for _, v in sorted(classes.items())]
-
-
-def matcha_topology(net: NetworkSpec, wl: Workload, budget: float = 0.5,
-                    seed: int = 0) -> MatchaTopology:
-    base = connectivity_graph(net)
-    return MatchaTopology("matcha", net.num_silos,
-                          tuple(_matching_decomposition(base)), budget, seed)
-
-
-def matcha_plus_topology(net: NetworkSpec, wl: Workload, budget: float = 0.5,
-                         seed: int = 0) -> MatchaTopology:
-    if net.name in ("gaia", "amazon"):
-        base = connectivity_graph(net)  # cloud networks are fully meshed
-    else:
-        base = physical_graph(net)
-    return MatchaTopology("matcha_plus", net.num_silos,
-                          tuple(_matching_decomposition(base)), budget, seed)
-
-
-TOPOLOGIES = {
-    "star": star_topology,
-    "matcha": matcha_topology,
-    "matcha_plus": matcha_plus_topology,
-    "mst": mst_topology,
-    "dmbst": dmbst_topology,
-    "ring": ring_topology,
-}
-
-
-def build_topology(name: str, net: NetworkSpec, wl: Workload, **kw) -> TopologyDesign:
-    try:
-        return TOPOLOGIES[name](net, wl, **kw)
-    except KeyError:
-        raise KeyError(f"unknown topology {name!r}; have {sorted(TOPOLOGIES)} "
-                       f"(+ 'multigraph' via repro.core.simulator)") from None
+from repro.design.catalog import (  # noqa: F401
+    DESIGN_FAMILIES,
+    MatchaTopology,
+    StaticTopology,
+    TOPOLOGIES,
+    TopologyDesign,
+    build_topology,
+    christofides_cycle,
+    connectivity_graph,
+    dmbst_topology,
+    get_family,
+    matcha_plus_topology,
+    matcha_topology,
+    mst_topology,
+    nominal_delay_matrix,
+    physical_graph,
+    ring_topology,
+    star_topology,
+    _counter_uniform,
+    _matching_decomposition,
+    _round_robin_matchings,
+)

@@ -1,0 +1,26 @@
+"""Topology-design subsystem (DESIGN.md §12).
+
+The paper's contribution is a *designed* topology, so design is a
+first-class layer here, sitting between the graph algorithms and the
+vectorized timing engine:
+
+* `repro.design.catalog` — one design family per topology (STAR, RING,
+  MST, dMBST, MATCHA(+), multigraph) owning BOTH construction and
+  timing semantics (previously split between `core/topology.py` and
+  `core/timing.py`). `repro.core.topology` remains a thin re-export
+  shim for existing imports.
+* `repro.design.batched` — batched construction: per-network and
+  per-(network, workload) artifacts (all-pairs delay matrices,
+  Christofides tours, min-weight matchings, matching decompositions,
+  MATCHA activation tables) computed once and shared across every grid
+  cell that provably needs identical bits, plus a factorized exact
+  MATCHA sampler.
+* `repro.design.search` — cycle-time-driven multigraph search: the
+  paper's Algorithm 1 is one point in the space of edge-multiplicity
+  assignments; `python -m repro.design.search` explores that space with
+  batched `TimingGrid` scoring and must match or beat the hand-built
+  multigraph on every paper network.
+"""
+
+from repro.design.catalog import (DESIGN_FAMILIES, DesignFamily,
+                                  get_family)  # noqa: F401

@@ -1,0 +1,579 @@
+"""Design catalog: one family per topology, owning construction AND
+timing semantics (DESIGN.md §12).
+
+Historically construction lived in `core/topology.py` while the timing
+semantics of the same designs (STAR's gather-then-broadcast, RING's
+max-plus throughput, MATCHA's per-round sampling, the multigraph's
+Eq. 4 recurrence) lived in `core/timing.py` — a ROADMAP-tracked split.
+Each :class:`DesignFamily` below closes it: ``build`` constructs the
+design object and ``timing_plan`` produces the matching
+`timing.TimingPlan`, so a caller can no longer pair a topology with the
+wrong timing model. `core.topology` re-exports everything here, so
+existing imports keep working.
+
+Construction functions accept optional precomputed inputs (the nominal
+delay matrix, a matching decomposition, ...) so `repro.design.batched`
+can share expensive artifacts across a sweep grid without changing a
+single output bit; called without them they compute exactly what they
+always did.
+
+Edge weights used while CONSTRUCTING a topology are the congestion-free
+pair delays (degree 1): the topology is chosen before the degrees it
+induces are known. Cycle times are then evaluated with the actual
+degrees (delay.py / timing.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol
+
+import networkx as nx
+import numpy as np
+
+from repro.core import timing
+from repro.core.delay import Workload
+from repro.core.graph import Multigraph, Pair, SimpleGraph, canon, make_graph
+from repro.networks.zoo import NetworkSpec
+
+__all__ = [
+    "nominal_delay_matrix", "connectivity_graph", "physical_graph",
+    "TopologyDesign", "StaticTopology", "star_topology", "mst_topology",
+    "dmbst_topology", "ring_topology", "MatchaTopology", "matcha_topology",
+    "matcha_plus_topology", "TOPOLOGIES", "build_topology",
+    "DesignFamily", "DESIGN_FAMILIES", "get_family",
+]
+
+
+def nominal_delay_matrix(net: NetworkSpec, wl: Workload) -> np.ndarray:
+    """Congestion-free (degree-1) pair delay between every silo pair.
+
+    Array form of ``pair_delay_ms(..., deg=ones)`` over the whole matrix
+    (same elementwise Eq. 3 ops, so bit-identical weights feed the
+    MST/dMBST/ring constructions): the old N^2 scalar loop dominated
+    topology construction on exodus/ebone.
+    """
+    n = net.num_silos
+    ones = np.ones(n, dtype=np.int64)
+    d = timing.directed_delay_matrix(net, wl, ones, ones)
+    d = np.maximum(d, d.T)
+    np.fill_diagonal(d, 0.0)
+    return d
+
+
+def connectivity_graph(net: NetworkSpec) -> SimpleGraph:
+    """G_c: possible direct communications — complete graph over silos."""
+    n = net.num_silos
+    return make_graph(n, [(i, j) for i in range(n) for j in range(i + 1, n)])
+
+
+def physical_graph(net: NetworkSpec, k_nearest: int = 4) -> SimpleGraph:
+    """Approximate physical/underlay graph of an ISP network.
+
+    The Internet Topology Zoo publishes physical links; offline we
+    approximate them with a symmetric k-nearest-neighbour graph over the
+    latency metric (plus an MST union so it is always connected). Cloud
+    networks (gaia/amazon) are fully meshed, for which callers should use
+    connectivity_graph instead. Depends on latency only — workload
+    independent, so `design.batched` caches it per network.
+    """
+    n = net.num_silos
+    lat = net.latency_ms
+    pairs: set[Pair] = set()
+    for i in range(n):
+        order = np.argsort(lat[i])
+        picked = [int(j) for j in order if j != i][:k_nearest]
+        for j in picked:
+            pairs.add(canon(i, j))
+    # Union with the latency MST to guarantee connectivity.
+    g = nx.Graph()
+    for i in range(n):
+        for j in range(i + 1, n):
+            g.add_edge(i, j, weight=float(lat[i, j]))
+    for i, j in nx.minimum_spanning_edges(g, data=False):
+        pairs.add(canon(int(i), int(j)))
+    return make_graph(n, pairs)
+
+
+class TopologyDesign(Protocol):
+    name: str
+
+    def round_graph(self, k: int) -> SimpleGraph:
+        """Active (blocking) exchanges of communication round k."""
+        ...
+
+
+@dataclasses.dataclass
+class StaticTopology:
+    name: str
+    graph: SimpleGraph
+
+    def round_graph(self, k: int) -> SimpleGraph:
+        return self.graph
+
+
+def star_topology(net: NetworkSpec, wl: Workload) -> StaticTopology:
+    """STAR [3]: orchestrator at the hub minimizing the round cycle time.
+
+    Vectorized over candidate hubs: for hub h the star degrees are 1 for
+    the leaves and N-1 for the hub, so every pair delay of every
+    candidate star is an entry of two directed-delay matrices (leaf->hub
+    with out_deg 1 / in_deg N-1, and hub->leaf reversed). Same Eq. 3
+    ops as the old per-hub scalar loop, first minimum wins on ties.
+    """
+    n = net.num_silos
+    if n == 1:
+        return StaticTopology("star", make_graph(1, []))
+    ones = np.ones(n, np.int64)
+    fan = np.full(n, n - 1, np.int64)
+    off_diag = ~np.eye(n, dtype=bool)
+    d_up = timing.directed_delay_matrix(net, wl, ones, fan)  # [leaf, hub]
+    d_dn = timing.directed_delay_matrix(net, wl, fan, ones)  # [hub, leaf]
+    pair = np.maximum(d_up, d_dn.T)                          # [leaf, hub]
+    ct = np.max(pair, axis=0, initial=-np.inf, where=off_diag)
+    best_hub = int(np.argmin(ct))
+    return StaticTopology(
+        "star", make_graph(n, [(best_hub, i) for i in range(n) if i != best_hub]))
+
+
+def mst_topology(net: NetworkSpec, wl: Workload,
+                 d: np.ndarray | None = None) -> StaticTopology:
+    """MST [72]: Prim's minimum spanning tree over nominal pair delays."""
+    if d is None:
+        d = nominal_delay_matrix(net, wl)
+    g = nx.Graph()
+    n = net.num_silos
+    for i in range(n):
+        for j in range(i + 1, n):
+            g.add_edge(i, j, weight=float(d[i, j]))
+    tree = nx.minimum_spanning_tree(g, algorithm="prim")
+    return StaticTopology("mst", make_graph(n, [canon(int(i), int(j)) for i, j in tree.edges]))
+
+
+def dmbst_topology(net: NetworkSpec, wl: Workload, delta: int = 3,
+                   d: np.ndarray | None = None) -> StaticTopology:
+    """delta-MBST [58]: degree-bounded (min-bottleneck) spanning tree.
+
+    Greedy Kruskal over nominal delays with a degree cap; if the cap
+    makes a component unjoinable, the smallest-delay violating edge is
+    admitted (the same relaxation Marfoq et al. use in practice).
+    """
+    if d is None:
+        d = nominal_delay_matrix(net, wl)
+    n = net.num_silos
+    edges = sorted(
+        ((float(d[i, j]), i, j) for i in range(n) for j in range(i + 1, n)))
+    parent = list(range(n))
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    deg = np.zeros(n, dtype=np.int64)
+    chosen: list[Pair] = []
+    # Pass 1: respect the degree bound.
+    for w, i, j in edges:
+        if len(chosen) == n - 1:
+            break
+        if find(i) != find(j) and deg[i] < delta and deg[j] < delta:
+            parent[find(i)] = find(j)
+            deg[i] += 1
+            deg[j] += 1
+            chosen.append(canon(i, j))
+    # Pass 2: if still disconnected, relax the bound minimally.
+    for w, i, j in edges:
+        if len(chosen) == n - 1:
+            break
+        if find(i) != find(j):
+            parent[find(i)] = find(j)
+            deg[i] += 1
+            deg[j] += 1
+            chosen.append(canon(i, j))
+    return StaticTopology(f"dmbst", make_graph(n, chosen))
+
+
+def christofides_cycle(d: np.ndarray) -> list[int]:
+    """Christofides TSP cycle over a symmetric (N, N) weight matrix.
+
+    The exact call `ring_topology` always made, factored out so
+    `design.batched.christofides_tours` can dedup identical matrices
+    across a sweep grid against THIS function as the oracle. N <= 3
+    short-circuits to the trivial cycle (same special case as before).
+    """
+    n = d.shape[0]
+    if n <= 3:
+        return list(range(n)) + [0]
+    g = nx.Graph()
+    for i in range(n):
+        for j in range(i + 1, n):
+            g.add_edge(i, j, weight=float(d[i, j]))
+    # `traveling_salesman_problem` first completes the graph with
+    # all-pairs shortest paths, which is a pure no-op on our
+    # already-complete metric graph (verified identical tours on
+    # every paper network x workload) but costs more than the
+    # Christofides run itself — call the method directly.
+    return list(nx.approximation.christofides(g))
+
+
+def ring_topology(net: NetworkSpec, wl: Workload,
+                  d: np.ndarray | None = None) -> StaticTopology:
+    """RING [58]: Christofides TSP cycle over nominal pair delays.
+
+    This is also the overlay from which the paper's multigraph is built
+    (paper §4.1: "Similar to [58], we use the Christofides algorithm to
+    obtain the overlay").
+    """
+    if d is None:
+        d = nominal_delay_matrix(net, wl)
+    n = net.num_silos
+    cycle = christofides_cycle(d)
+    pairs = {canon(int(cycle[i]), int(cycle[i + 1])) for i in range(len(cycle) - 1)}
+    return StaticTopology("ring", make_graph(n, pairs))
+
+
+@dataclasses.dataclass(frozen=True)
+class MatchaTopology:
+    """MATCHA [85]: matching decomposition + random activation.
+
+    The base graph is decomposed into matchings (a proper edge
+    coloring); each round every matching is activated independently
+    with probability `budget` (the communication budget C_b). MATCHA
+    runs over the connectivity graph; MATCHA(+) — Marfoq et al.'s
+    variant — runs over the (approximate) physical underlay, which is
+    why the two coincide on fully-meshed cloud networks (Table 1:
+    identical Gaia/Amazon rows) and differ on ISP topologies.
+
+    Activation draws are *counter-based*: the coin flip for (round k,
+    matching m) is a pure splitmix64-style hash of ``(seed, k, m)``, so
+    ``round_graph(k)`` is a pure function of ``(seed, k)`` —
+    reproducible across processes and call orders, and the whole
+    6,400-round activation matrix is one vectorized hash instead of
+    6,400 Generator constructions. (The old design hid a mutable RNG
+    stream in the instance, so two consumers walking the same design,
+    or the same consumer calling ``round_graph`` twice, silently
+    sampled different sequences.)
+    """
+
+    name: str
+    num_nodes: int
+    matchings: tuple[tuple[Pair, ...], ...]
+    budget: float
+    seed: int = 0
+
+    @property
+    def num_matchings(self) -> int:
+        return len(self.matchings)
+
+    def activation(self, k: int) -> np.ndarray:
+        """(M,) bool — which matchings are live in round k."""
+        return self.activation_rows(np.asarray([k]))[0]
+
+    def activation_rows(self, rounds_idx: np.ndarray) -> np.ndarray:
+        """(len(rounds_idx), M) bool activation for arbitrary rounds."""
+        u = _counter_uniform(self.seed, rounds_idx, len(self.matchings))
+        return u < self.budget
+
+    def activation_matrix(self, rounds: int) -> np.ndarray:
+        """(rounds, M) bool — the whole sampled horizon at once."""
+        return self.activation_rows(np.arange(rounds))
+
+    def round_graph(self, k: int) -> SimpleGraph:
+        act = self.activation(k)
+        pairs: list[Pair] = []
+        for live, m in zip(act, self.matchings):
+            if live:
+                pairs.extend(m)
+        return make_graph(self.num_nodes, pairs)
+
+
+def _counter_uniform(seed: int, rounds_idx: np.ndarray,
+                     num_streams: int) -> np.ndarray:
+    """Counter-based uniforms in [0, 1): ``(len(rounds_idx), M)``.
+
+    splitmix64 finalizer over a linear mix of (seed, round, stream) —
+    stateless, so any subset of rounds can be drawn in any order (or
+    all at once) with identical bits. 53-bit mantissa uniforms, same
+    construction as `numpy`'s float64 path.
+    """
+    p1, p2, p3 = (np.uint64(x) for x in timing.SPLITMIX64_CONSTANTS)
+    k = np.asarray(rounds_idx, np.uint64)[:, None]
+    m = np.arange(num_streams, dtype=np.uint64)[None, :]
+    seed_mix = np.uint64((seed * timing.SPLITMIX64_CONSTANTS[2]) % 2**64)
+    x = (seed_mix + k) * p1 + m * p2
+    x ^= x >> np.uint64(30)
+    x *= p2
+    x ^= x >> np.uint64(27)
+    x *= p3
+    x ^= x >> np.uint64(31)
+    return (x >> np.uint64(11)).astype(np.float64) * float(2.0 ** -53)
+
+
+def _round_robin_matchings(n: int) -> list[list[Pair]]:
+    """Circle-method 1-factorization of K_n: n-1 perfect matchings for
+    even n, n near-perfect matchings (one idle node each) for odd n —
+    the optimal edge coloring, built in O(n^2) without a line graph."""
+    odd = n % 2 == 1
+    m = n + 1 if odd else n          # pad odd n with a phantom node
+    rounds = m - 1
+    out: list[list[Pair]] = []
+    ring = list(range(1, m))         # node 0 fixed, the rest rotate
+    for r in range(rounds):
+        rot = ring[r:] + ring[:r]
+        stack = [0] + rot
+        pairs = []
+        for a, b in zip(stack[:m // 2], reversed(stack[m // 2:])):
+            if odd and (a == m - 1 or b == m - 1):
+                continue             # drop the phantom node's pair
+            pairs.append(canon(a, b))
+        out.append(sorted(pairs))
+    return out
+
+
+def _matching_decomposition(graph: SimpleGraph) -> list[tuple[Pair, ...]]:
+    """Edge-color the graph; each color class is a matching.
+
+    Complete graphs (MATCHA's connectivity base) take the optimal
+    circle-method 1-factorization. Everything else gets a
+    Misra–Gries-style greedy pass: scan edges densest-vertex-first and
+    give each the smallest color free at both endpoints, tracked in one
+    (N, colors) numpy availability table — O(E * Delta) array ops
+    instead of the old O(E^2) Python line-graph construction, which
+    dominated full sweeps on exodus/ebone.
+    """
+    n = graph.num_nodes
+    num_pairs = graph.num_pairs
+    if num_pairs == n * (n - 1) // 2 and n >= 2:
+        return [tuple(m) for m in _round_robin_matchings(n)]
+    if not num_pairs:
+        return []
+    deg = graph.degrees()
+    max_colors = 2 * int(deg.max()) - 1 if deg.max() else 1
+    pi = np.fromiter((p[0] for p in graph.pairs), np.int64, num_pairs)
+    pj = np.fromiter((p[1] for p in graph.pairs), np.int64, num_pairs)
+    # Densest endpoints first (the Misra–Gries fan heuristic's spirit):
+    # saturated vertices pick colors while the palette is still tight.
+    order = np.argsort(-(deg[pi] + deg[pj]), kind="stable")
+    used = np.zeros((n, max_colors), dtype=bool)
+    color = np.empty(num_pairs, dtype=np.int64)
+    for e in order:
+        i, j = pi[e], pj[e]
+        c = int(np.argmax(~(used[i] | used[j])))
+        color[e] = c
+        used[i, c] = used[j, c] = True
+    classes: dict[int, list[Pair]] = {}
+    for e, c in enumerate(color):
+        classes.setdefault(int(c), []).append(graph.pairs[e])
+    return [tuple(sorted(v)) for _, v in sorted(classes.items())]
+
+
+def matcha_topology(net: NetworkSpec, wl: Workload, budget: float = 0.5,
+                    seed: int = 0,
+                    matchings: tuple | None = None) -> MatchaTopology:
+    if matchings is None:
+        matchings = tuple(_matching_decomposition(connectivity_graph(net)))
+    return MatchaTopology("matcha", net.num_silos, matchings, budget, seed)
+
+
+def matcha_plus_topology(net: NetworkSpec, wl: Workload, budget: float = 0.5,
+                         seed: int = 0,
+                         matchings: tuple | None = None) -> MatchaTopology:
+    if matchings is None:
+        if net.name in ("gaia", "amazon"):
+            base = connectivity_graph(net)  # cloud networks are fully meshed
+        else:
+            base = physical_graph(net)
+        matchings = tuple(_matching_decomposition(base))
+    return MatchaTopology("matcha_plus", net.num_silos, matchings, budget,
+                          seed)
+
+
+TOPOLOGIES = {
+    "star": star_topology,
+    "matcha": matcha_topology,
+    "matcha_plus": matcha_plus_topology,
+    "mst": mst_topology,
+    "dmbst": dmbst_topology,
+    "ring": ring_topology,
+}
+
+
+def build_topology(name: str, net: NetworkSpec, wl: Workload, **kw) -> TopologyDesign:
+    try:
+        return TOPOLOGIES[name](net, wl, **kw)
+    except KeyError:
+        raise KeyError(f"unknown topology {name!r}; have {sorted(TOPOLOGIES)} "
+                       f"(+ 'multigraph' via repro.core.simulator)") from None
+
+
+# ---------------------------------------------------------------------------
+# Design families: construction + timing semantics in one object
+# ---------------------------------------------------------------------------
+
+
+class DesignFamily(Protocol):
+    """One named topology family.
+
+    ``build`` constructs the design object (a `TopologyDesign` or a
+    `Multigraph`); ``timing_plan`` produces the `timing.TimingPlan`
+    carrying that family's timing SEMANTICS — STAR's sequential
+    gather+broadcast, RING's max-plus throughput, MATCHA's per-round
+    sampling, the multigraph's Eq. 4 recurrence. ``ctx`` (optional,
+    duck-typed — `repro.design.batched.DesignContext`) supplies shared
+    construction artifacts; outputs are bit-identical with or without
+    it.
+    """
+
+    name: str
+
+    def build(self, net: NetworkSpec, wl: Workload, ctx=None): ...
+
+    def timing_plan(self, net: NetworkSpec, wl: Workload, *,
+                    ctx=None) -> timing.TimingPlan: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class StarFamily:
+    name: str = "star"
+
+    def build(self, net, wl, ctx=None):
+        return star_topology(net, wl)
+
+    def timing_plan(self, net, wl, *, ctx=None):
+        # STAR is client-server FedAvg: a round is gather THEN
+        # broadcast through the best hub, not an Eq. 5 max over the hub
+        # graph's pairs — the semantics live with the family now.
+        return timing.star_timing_plan(net, wl)
+
+
+@dataclasses.dataclass(frozen=True)
+class RingFamily:
+    name: str = "ring"
+
+    def build(self, net, wl, ctx=None):
+        if ctx is not None:
+            return StaticTopology("ring", ctx.ring_graph(wl))
+        return ring_topology(net, wl)
+
+    def timing_plan(self, net, wl, *, ctx=None,
+                    overlay: SimpleGraph | None = None):
+        if overlay is None:
+            overlay = self.build(net, wl, ctx).graph
+        return timing.ring_timing_plan(net, wl, graph=overlay)
+
+
+@dataclasses.dataclass(frozen=True)
+class MstFamily:
+    name: str = "mst"
+
+    def build(self, net, wl, ctx=None):
+        return mst_topology(net, wl,
+                            d=ctx.nominal(wl) if ctx is not None else None)
+
+    def timing_plan(self, net, wl, *, ctx=None):
+        return timing.static_timing_plan(
+            self.name, net, wl, self.build(net, wl, ctx).round_graph(0))
+
+
+@dataclasses.dataclass(frozen=True)
+class DmbstFamily:
+    name: str = "dmbst"
+    delta: int = 3
+
+    def build(self, net, wl, ctx=None):
+        return dmbst_topology(net, wl, delta=self.delta,
+                              d=ctx.nominal(wl) if ctx is not None else None)
+
+    def timing_plan(self, net, wl, *, ctx=None):
+        return timing.static_timing_plan(
+            self.name, net, wl, self.build(net, wl, ctx).round_graph(0))
+
+
+@dataclasses.dataclass(frozen=True)
+class MatchaFamily:
+    name: str = "matcha"
+    plus: bool = False
+    budget: float = 0.5
+    seed: int = 0
+    sample_rounds: int = 512
+
+    def build(self, net, wl, ctx=None):
+        builder = matcha_plus_topology if self.plus else matcha_topology
+        matchings = None
+        if ctx is not None:
+            matchings = (ctx.matcha_plus_matchings() if self.plus
+                         else ctx.matcha_matchings())
+        return builder(net, wl, budget=self.budget, seed=self.seed,
+                       matchings=matchings)
+
+    def timing_plan(self, net, wl, *, ctx=None):
+        design = self.build(net, wl, ctx)
+        sampler = None
+        if ctx is not None:
+            sampler = ctx.sampler(design, wl, self.sample_rounds)
+        return timing.sampled_timing_plan(
+            self.name, net, wl, design, sample_rounds=self.sample_rounds,
+            sampler=sampler)
+
+
+@dataclasses.dataclass(frozen=True)
+class MultigraphFamily:
+    name: str = "multigraph"
+    t: int = 5
+    cap_states: int | None = timing.CAP_STATES
+
+    def build(self, net, wl, ctx=None,
+              overlay: SimpleGraph | None = None) -> Multigraph:
+        from repro.core.multigraph import build_multigraph
+
+        if overlay is None:
+            overlay = (ctx.ring_graph(wl) if ctx is not None
+                       else ring_topology(net, wl).graph)
+        return build_multigraph(net, wl, overlay, t=self.t)
+
+    def timing_plan(self, net, wl, *, ctx=None,
+                    overlay: SimpleGraph | None = None):
+        if overlay is None and ctx is not None:
+            overlay = ctx.ring_graph(wl)
+        return timing.multigraph_timing_plan(
+            net, wl, t=self.t, overlay=overlay, cap_states=self.cap_states)
+
+
+#: The Table-1 catalog. Values are zero-config factory instances; use
+#: `get_family` to configure knobs (t, seed, budget, sample_rounds, ...).
+DESIGN_FAMILIES = {
+    "star": StarFamily(),
+    "matcha": MatchaFamily(),
+    "matcha_plus": MatchaFamily(name="matcha_plus", plus=True),
+    "mst": MstFamily(),
+    "dmbst": DmbstFamily(),
+    "ring": RingFamily(),
+    "multigraph": MultigraphFamily(),
+}
+
+#: Which `get_family` knobs each family consumes. ONE table drives both
+#: the registry and the configuration, so adding a family means adding
+#: exactly one DESIGN_FAMILIES entry and (optionally) one row here.
+_FAMILY_KNOBS = {
+    "dmbst": ("delta",),
+    "matcha": ("seed", "budget", "sample_rounds"),
+    "matcha_plus": ("seed", "budget", "sample_rounds"),
+    "multigraph": ("t", "cap_states"),
+}
+
+
+def get_family(name: str, *, t: int = 5,
+               cap_states: int | None = timing.CAP_STATES,
+               seed: int = 0, budget: float = 0.5,
+               delta: int = 3, sample_rounds: int = 512) -> DesignFamily:
+    """Configured design family for ``name`` (the one dispatch table)."""
+    try:
+        base = DESIGN_FAMILIES[name]
+    except KeyError:
+        raise KeyError(f"unknown topology {name!r}; have "
+                       f"{sorted(DESIGN_FAMILIES)}") from None
+    knobs = dict(t=t, cap_states=cap_states, seed=seed, budget=budget,
+                 delta=delta, sample_rounds=sample_rounds)
+    kw = {k: knobs[k] for k in _FAMILY_KNOBS.get(name, ())}
+    return dataclasses.replace(base, **kw) if kw else base

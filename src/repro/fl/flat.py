@@ -31,8 +31,19 @@ from jax import lax
 Params = Any
 
 
-def pin_f32(x: jax.Array, step: jax.Array) -> jax.Array:
-    """Pin ``x`` to its rounded float32 value across layouts.
+#: Float dtypes `pin_dtype` knows the matching unsigned-integer width
+#: for. (float8 variants are absent on purpose: no FL runtime trains
+#: them and their XLA:CPU lowering promotes through f32 anyway.)
+_PIN_UINT_OF = {
+    jnp.dtype(jnp.float16): jnp.uint16,
+    jnp.dtype(jnp.bfloat16): jnp.uint16,
+    jnp.dtype(jnp.float32): jnp.uint32,
+    jnp.dtype(jnp.float64): jnp.uint64,
+}
+
+
+def pin_dtype(x: jax.Array, step: jax.Array) -> jax.Array:
+    """Pin ``x`` to its rounded floating-point value across layouts.
 
     XLA:CPU lets LLVM contract ``a*b + c`` into an FMA, and whether it
     fires depends on how the surrounding computation was fused — the
@@ -46,17 +57,27 @@ def pin_f32(x: jax.Array, step: jax.Array) -> jax.Array:
     away), so this helper routes the value through an integer xor with
     an *opaque zero* — ``step >> 31`` for a non-negative traced int32
     ``step`` is always 0 at runtime, but the compiler cannot prove it,
-    so the product must be rounded to f32 before the add. Apply it to
-    the multiply feeding an add/sub and the pattern is pinned to
+    so the product must be rounded before the add. Apply it to the
+    multiply feeding an add/sub and the pattern is pinned to
     mul-then-add in every layout.
 
-    Non-f32 inputs pass through unchanged (the FL runtimes train f32).
+    Works for every float dtype with a known uint bitcast width
+    (f16/bf16/f32/f64). The opaque zero is derived in uint32 FIRST and
+    only then narrowed: casting a large ``step`` (>= 2**15) straight to
+    uint16 could set the shifted-out high bit and the xor would flip a
+    real mantissa bit. Other dtypes pass through unchanged.
     """
-    if x.dtype != jnp.float32:
+    uint = _PIN_UINT_OF.get(x.dtype)
+    if uint is None:
         return x
     zero = lax.shift_right_logical(step.astype(jnp.uint32), jnp.uint32(31))
-    u = lax.bitcast_convert_type(x, jnp.uint32) ^ zero
-    return lax.bitcast_convert_type(u, jnp.float32)
+    u = lax.bitcast_convert_type(x, uint) ^ zero.astype(uint)
+    return lax.bitcast_convert_type(u, x.dtype)
+
+
+#: Backwards-compatible alias — the FL runtimes train f32 and every
+#: existing call site predates the bf16/fp64 generalization.
+pin_f32 = pin_dtype
 
 
 @dataclasses.dataclass(frozen=True)

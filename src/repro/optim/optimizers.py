@@ -21,7 +21,7 @@ def _tmap(f, *trees):
 
 def sgd(lr: float, momentum: float = 0.0,
         weight_decay: float = 0.0) -> Optimizer:
-    from repro.fl.flat import pin_f32  # lazy: optim must not import fl
+    from repro.fl.flat import pin_dtype  # lazy: optim must not import fl
 
     def init(params):
         if momentum == 0.0:
@@ -39,13 +39,13 @@ def sgd(lr: float, momentum: float = 0.0,
             new = _tmap(lambda p, g: p - (lr_t * g).astype(p.dtype),
                         params, grads)
             return new, {"step": step}
-        # `pin_f32` pins the mul-feeding-add sites to rounded f32 so
+        # `pin_dtype` pins the mul-feeding-add sites to rounded values so
         # the momentum path is bit-identical between this per-leaf
         # layout and the flat (N, T) layout (see fl/flat.py) —
         # otherwise LLVM FMA-contracts the two layouts differently.
-        mu = _tmap(lambda m, g: pin_f32(momentum * m, step) + g,
+        mu = _tmap(lambda m, g: pin_dtype(momentum * m, step) + g,
                    state["mu"], grads)
-        new = _tmap(lambda p, m: p - pin_f32(lr_t * m, step).astype(p.dtype),
+        new = _tmap(lambda p, m: p - pin_dtype(lr_t * m, step).astype(p.dtype),
                     params, mu)
         return new, {"step": step, "mu": mu}
 
@@ -64,7 +64,7 @@ def flat_sgd(lr: float, momentum: float = 0.0,
     construction in DPASGD's synchronized rounds).
     """
 
-    from repro.fl.flat import pin_f32  # lazy: optim must not import fl
+    from repro.fl.flat import pin_dtype  # lazy: optim must not import fl
 
     def init(w):
         state = {"step": jnp.zeros((), jnp.int32)}
@@ -82,8 +82,8 @@ def flat_sgd(lr: float, momentum: float = 0.0,
         # same pinned sites as `sgd` — the two momentum paths are
         # bit-for-bit equal in every layout (tests/test_flat_runtime.py
         # holds them exactly equal, not allclose).
-        mu = pin_f32(momentum * state["mu"], step) + g
-        return (w - pin_f32(lr_t * mu, step).astype(w.dtype),
+        mu = pin_dtype(momentum * state["mu"], step) + g
+        return (w - pin_dtype(lr_t * mu, step).astype(w.dtype),
                 {"step": step, "mu": mu})
 
     return Optimizer(init, update)

@@ -1,0 +1,318 @@
+"""Topology-design subsystem tests (repro/design/):
+
+  * catalog families == the `timing.make_timing_plan` dispatch they
+    now implement, and `core.topology` shim identity;
+  * batched Christofides tours / min-weight matchings == the per-item
+    networkx oracles on random metric graphs (dedup is exact-bytes);
+  * factorized MATCHA sampler == `timing.sampled_cycle_times`
+    bit-for-bit on complete (odd and even N) bases, and the
+    non-factorized fallback is the general engine itself;
+  * shared sweep construction (`SweepConstructor` / DesignContext) ==
+    legacy per-cell construction, report-for-report and
+    cycle-times-exact, with lazy == eager sampled plans;
+  * grid retirement: `TimingGrid` with per-cell retirement == the
+    non-retiring path == the per-cell oracles, bit-for-bit;
+  * multiplicity search: the Algorithm-1 vector routed through
+    `multiplicity_plan` == `multigraph_timing_plan`, the search
+    matches or beats the paper design under the density floor, and the
+    CLI exits 0.
+"""
+
+import numpy as np
+import pytest
+
+from _hyp_compat import given, settings, st  # hypothesis or local fallback
+from repro.core import timing
+from repro.core.delay import FEMNIST, WORKLOADS
+from repro.core.graph import make_graph
+from repro.core.multigraph import build_multigraph
+from repro.design import batched, catalog, search
+from repro.networks.zoo import NetworkSpec, Silo, get_network
+
+GAIA = get_network("gaia")
+
+
+def _tiny_net(n, latency=5.0, hetero=True, name=None):
+    silos = tuple(
+        Silo(name=f"s{i}", lat=float(i), lon=0.0,
+             upload_gbps=10.0 * (1.0 + 0.1 * i if hetero else 1.0),
+             download_gbps=10.0 * (1.0 + 0.07 * i if hetero else 1.0),
+             compute_scale=1.0 + (0.05 * i if hetero else 0.0))
+        for i in range(n))
+    rng = np.random.default_rng(n)
+    lat = rng.uniform(1.0, latency, (n, n))
+    lat = np.maximum(lat, lat.T)
+    np.fill_diagonal(lat, 0.0)
+    return NetworkSpec(name=name or f"tiny{n}", silos=silos, latency_ms=lat)
+
+
+def _metric_matrix(rng, n):
+    """Random symmetric metric-ish weight matrix (positive, zero diag)."""
+    pts = rng.uniform(0.0, 100.0, (n, 2))
+    d = np.hypot(pts[:, 0][:, None] - pts[:, 0][None, :],
+                 pts[:, 1][:, None] - pts[:, 1][None, :])
+    np.fill_diagonal(d, 0.0)
+    return d
+
+
+# ---------------------------------------------------------------------------
+# catalog families own construction + timing
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("topo", ["star", "matcha", "matcha_plus", "mst",
+                                  "dmbst", "ring", "multigraph"])
+def test_family_timing_plan_matches_make_timing_plan(topo):
+    fam = catalog.get_family(topo, sample_rounds=64)
+    plan = fam.timing_plan(GAIA, FEMNIST)
+    ref = timing.make_timing_plan(topo, GAIA, FEMNIST, sample_rounds=64)
+    assert plan.report(64) == ref.report(64)
+    np.testing.assert_array_equal(plan.cycle_times(64),
+                                  ref.cycle_times(64))
+
+
+def test_family_build_matches_legacy_builders():
+    assert (catalog.get_family("ring").build(GAIA, FEMNIST).graph
+            == catalog.ring_topology(GAIA, FEMNIST).graph)
+    assert (catalog.get_family("mst").build(GAIA, FEMNIST).graph
+            == catalog.mst_topology(GAIA, FEMNIST).graph)
+    mg = catalog.get_family("multigraph", t=3).build(GAIA, FEMNIST)
+    ref = build_multigraph(GAIA, FEMNIST,
+                           catalog.ring_topology(GAIA, FEMNIST).graph, t=3)
+    assert mg.multiplicity == ref.multiplicity
+
+
+def test_core_topology_shim_reexports_catalog():
+    """`core.topology` is a pure re-export: same objects, not copies."""
+    from repro.core import topology
+
+    assert topology.ring_topology is catalog.ring_topology
+    assert topology.MatchaTopology is catalog.MatchaTopology
+    assert topology.build_topology is catalog.build_topology
+    assert topology.TOPOLOGIES is catalog.TOPOLOGIES
+
+
+# ---------------------------------------------------------------------------
+# batched graph algorithms == per-item networkx oracles
+# ---------------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_batched_christofides_matches_oracle(seed):
+    rng = np.random.default_rng(seed)
+    mats = [_metric_matrix(rng, int(rng.integers(4, 12)))
+            for _ in range(int(rng.integers(2, 5)))]
+    mats.append(mats[0].copy())     # exercise the dedup path
+    tours = batched.christofides_tours(mats)
+    for d, tour in zip(mats, tours):
+        assert tour == catalog.christofides_cycle(d)
+    assert tours[-1] == tours[0]
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_batched_min_weight_matchings_match_oracle(seed):
+    import networkx as nx
+
+    rng = np.random.default_rng(seed)
+    mats, nodesets = [], []
+    for _ in range(int(rng.integers(2, 5))):
+        n = int(rng.integers(4, 12))
+        d = _metric_matrix(rng, n)
+        k = 2 * int(rng.integers(1, n // 2 + 1))   # even subset size
+        mats.append(d)
+        nodesets.append(sorted(rng.choice(n, size=k, replace=False)))
+    mats.append(mats[0].copy())
+    nodesets.append(list(nodesets[0]))
+    got = batched.min_weight_matchings(mats, nodesets)
+    for d, nodes, m in zip(mats, nodesets, got):
+        g = nx.Graph()
+        for x, i in enumerate(nodes):
+            for j in nodes[x + 1:]:
+                g.add_edge(int(i), int(j), weight=float(d[i, j]))
+        ref = {tuple(sorted(p)) for p in nx.min_weight_matching(g)}
+        assert m == ref
+
+
+# ---------------------------------------------------------------------------
+# factorized MATCHA sampler == the general engine, bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [4, 5, 6, 7])   # even and odd complete bases
+def test_factorized_sampler_matches_oracle_tiny(n):
+    net = _tiny_net(n, hetero=True)
+    design = catalog.matcha_topology(net, FEMNIST, seed=3)
+    assert batched._detect_factorization(design.matchings, n) is not None
+    rounds = 300
+    ref = timing.sampled_cycle_times(design, net, FEMNIST, rounds)
+    got = batched.batched_sampled_cycle_times(design, net, FEMNIST, rounds)
+    np.testing.assert_array_equal(got, ref)
+
+
+@pytest.mark.parametrize("netname,topo", [
+    ("gaia", "matcha"),          # odd complete (11)
+    ("amazon", "matcha"),        # even complete (22)
+    ("geant", "matcha_plus"),    # physical base -> general fallback
+])
+def test_factorized_sampler_matches_oracle_paper(netname, topo):
+    net = get_network(netname)
+    design = catalog.build_topology(topo, net, FEMNIST, seed=0)
+    rounds = 400
+    ref = timing.sampled_cycle_times(design, net, FEMNIST, rounds)
+    got = batched.batched_sampled_cycle_times(design, net, FEMNIST, rounds)
+    np.testing.assert_array_equal(got, ref)
+
+
+def test_lazy_sampled_plan_equals_eager():
+    design = catalog.matcha_topology(GAIA, FEMNIST, seed=0)
+    lazy = timing.sampled_timing_plan("matcha", GAIA, FEMNIST, design,
+                                      sample_rounds=200)
+    assert lazy.period_times is None          # nothing materialized yet
+    eager = timing.sampled_cycle_times(design, GAIA, FEMNIST, 200)
+    np.testing.assert_array_equal(lazy.cycle_times(200), eager)
+    assert lazy.report(200).total_time_s == float(eager.sum()) / 1e3
+
+
+# ---------------------------------------------------------------------------
+# shared sweep construction == legacy per-cell construction
+# ---------------------------------------------------------------------------
+
+
+def test_shared_construction_bitexact_vs_legacy():
+    """The whole shared-construction surface on a grid that exercises
+    every artifact: nominal-matrix reuse (mst+dmbst+ring), ring-graph
+    reuse (ring+multigraph t=3,5), per-network decompositions, the
+    factorized sampler (complete base) and the matcha+ fallback, and
+    MATCHA==MATCHA+ horizon dedup on a fully-meshed cloud network."""
+    from repro.core import sweep
+
+    cfg = sweep.SweepConfig(
+        topologies=("star", "matcha", "matcha_plus", "mst", "dmbst",
+                    "ring", "multigraph"),
+        networks=("gaia", "geant"), workloads=("femnist", "sentiment140"),
+        t_values=(3, 5), num_rounds=500)
+    shared_plans, _ = sweep.build_sweep_plans(cfg, shared=True)
+    legacy_plans, _ = sweep.build_sweep_plans(cfg, shared=False)
+    assert len(shared_plans) == len(legacy_plans)
+    for s, l in zip(shared_plans, legacy_plans):
+        np.testing.assert_array_equal(
+            s.cycle_times(cfg.num_rounds), l.cycle_times(cfg.num_rounds),
+            err_msg=f"{l.topology}/{l.network}/{l.workload}")
+        assert s.report(cfg.num_rounds) == l.report(cfg.num_rounds)
+    # and the full run_sweep paths agree cell-for-cell
+    a = sweep.run_sweep(cfg, batched=True, shared=True)
+    b = sweep.run_sweep(cfg, batched=False, shared=False)
+    for ca, cb in zip(a, b):
+        assert ca.report == cb.report
+
+
+def test_matcha_plus_horizon_dedup_on_cloud_networks():
+    """On fully-meshed gaia, MATCHA and MATCHA(+) are the same design:
+    the context must hand both the identical horizon object."""
+    ctx = batched.DesignContext(GAIA)
+    m = catalog.get_family("matcha", sample_rounds=100)
+    p = catalog.get_family("matcha_plus", sample_rounds=100)
+    t1 = m.timing_plan(GAIA, FEMNIST, ctx=ctx).cycle_times(100)
+    t2 = p.timing_plan(GAIA, FEMNIST, ctx=ctx).cycle_times(100)
+    np.testing.assert_array_equal(t1, t2)
+    assert len(ctx._sampled) == 1        # one cached horizon, not two
+
+
+# ---------------------------------------------------------------------------
+# grid retirement == non-retiring == per-cell, bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+def _grid_all_paths_equal(plans, rounds):
+    grid = timing.build_timing_grid(plans)
+    retired = grid.cycle_time_matrix(rounds, retire=True)
+    full = grid.cycle_time_matrix(rounds, retire=False)
+    np.testing.assert_array_equal(retired, full)
+    for c, plan in enumerate(plans):
+        np.testing.assert_array_equal(
+            retired[c], plan.cycle_times(rounds),
+            err_msg=f"cell {c}: {plan.topology}/{plan.network}")
+    for ra, rb in zip(grid.reports(rounds, retire=True),
+                      grid.reports(rounds, retire=False)):
+        assert ra == rb
+
+
+def test_grid_retirement_bitexact_paper_cells():
+    """Mixed transient lengths: small gaia cells lock their orbits long
+    before the larger geant cells, so rows genuinely retire early and
+    the tails are tiled from each cell's own lock round."""
+    plans = [timing.multigraph_timing_plan(get_network(n), WORKLOADS[w],
+                                           t=t)
+             for n in ("gaia", "geant")
+             for w in ("femnist", "inaturalist")
+             for t in (3, 5)]
+    _grid_all_paths_equal(plans, 900)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=10, deadline=None)
+def test_grid_retirement_bitexact_random_cells(seed):
+    rng = np.random.default_rng(seed)
+    plans = []
+    for _ in range(int(rng.integers(2, 5))):
+        n = int(rng.integers(3, 9))
+        net = _tiny_net(n, latency=float(rng.uniform(2.0, 30.0)),
+                        hetero=bool(rng.integers(0, 2)))
+        pairs = {(i, (i + 1) % n) if i < (i + 1) % n else ((i + 1) % n, i)
+                 for i in range(n)}
+        extra = [(i, j) for i in range(n) for j in range(i + 1, n)
+                 if rng.random() < 0.3]
+        overlay = make_graph(n, list(pairs) + extra)
+        plans.append(timing.multigraph_timing_plan(
+            net, FEMNIST, t=int(rng.integers(2, 7)), overlay=overlay))
+    _grid_all_paths_equal(plans, int(rng.integers(50, 400)))
+
+
+# ---------------------------------------------------------------------------
+# multiplicity search
+# ---------------------------------------------------------------------------
+
+
+def test_multiplicity_plan_matches_multigraph_plan():
+    """Algorithm 1's vector through the search constructor must be the
+    SAME plan the paper pipeline builds (same Eq. 4 arrays, same
+    schedule, same cycle times)."""
+    overlay = catalog.ring_topology(GAIA, FEMNIST).graph
+    mg = build_multigraph(GAIA, FEMNIST, overlay, t=5)
+    vec = tuple(mg.multiplicity[p] for p in overlay.pairs)
+    plan = search.multiplicity_plan(GAIA, FEMNIST, overlay, vec)
+    ref = timing.multigraph_timing_plan(GAIA, FEMNIST, t=5, overlay=overlay)
+    np.testing.assert_array_equal(plan.strong, ref.strong)
+    np.testing.assert_array_equal(plan.d0, ref.d0)
+    np.testing.assert_array_equal(plan.cycle_times(300),
+                                  ref.cycle_times(300))
+
+
+def test_search_matches_or_beats_paper_design():
+    res = search.search_design(GAIA, FEMNIST, rounds=400, max_iters=4)
+    assert res.best_mean_ms <= res.paper_mean_ms
+    # the density floor held: the searched design communicates at least
+    # as densely as the hand-built one
+    assert res.best_strong_frac >= res.paper_strong_frac - 1e-9
+    assert all(1 <= m <= res.t_max for m in res.best_mults)
+    assert res.evaluations > 0 and res.elapsed_s > 0
+
+
+def test_search_unconstrained_degenerates_cheaper():
+    """Dropping the density floor can only lower the optimum (larger
+    feasible set) — and documents WHY the floor exists."""
+    a = search.search_design(GAIA, FEMNIST, rounds=300, max_iters=3,
+                             density_floor=True)
+    b = search.search_design(GAIA, FEMNIST, rounds=300, max_iters=3,
+                             density_floor=False)
+    assert b.best_mean_ms <= a.best_mean_ms
+
+
+def test_search_cli_smoke(capsys):
+    rc = search.main(["--networks", "gaia", "--workloads", "femnist",
+                      "--rounds", "300", "--max-iters", "2"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "design search" in out and "gaia" in out

@@ -318,3 +318,59 @@ def test_trainer_flat_matches_legacy_momentum():
     assert flat.eval_accs == legacy.eval_accs
     # both runtimes share the same TimingPlan wall-clock axis exactly
     assert flat.cycle_times_ms == legacy.cycle_times_ms
+
+
+# ---------------------------------------------------------------------------
+# pin_dtype: uint-width generalization of pin_f32 (bf16 / f16 / f32 / f64)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype,uint", [
+    (jnp.float16, jnp.uint16),
+    (jnp.bfloat16, jnp.uint16),
+    (jnp.float32, jnp.uint32),
+])
+@pytest.mark.parametrize("step", [0, 1, 2 ** 15 + 3, 2 ** 31 - 1])
+def test_pin_dtype_is_bitwise_identity(dtype, uint, step):
+    """The opaque-zero xor must be a bitwise no-op for EVERY pinnable
+    dtype and EVERY step value — in particular steps >= 2**15, where a
+    naive cast of the step to a 16-bit uint before the >> (width-1)
+    shift would leak a set bit into the xor and flip real mantissa
+    bits (the trap the uint32-first derivation avoids)."""
+    x = jnp.asarray(np.random.default_rng(0).normal(size=257), dtype)
+    y = jax.jit(flatmod.pin_dtype)(x, jnp.int32(step))
+    assert y.dtype == x.dtype
+    np.testing.assert_array_equal(
+        np.asarray(jax.lax.bitcast_convert_type(x, uint)),
+        np.asarray(jax.lax.bitcast_convert_type(y, uint)))
+
+
+def test_pin_dtype_f64_and_passthrough():
+    """f64 maps to uint64 (under x64), non-float dtypes pass through
+    untouched, and `pin_f32` remains an alias of `pin_dtype`."""
+    assert flatmod.pin_f32 is flatmod.pin_dtype
+    ints = jnp.arange(5, dtype=jnp.int32)
+    assert flatmod.pin_dtype(ints, jnp.int32(1)) is ints
+    with jax.experimental.enable_x64():
+        x = jnp.asarray(np.random.default_rng(1).normal(size=64),
+                        jnp.float64)
+        y = jax.jit(flatmod.pin_dtype)(x, jnp.int32(2 ** 15 + 7))
+        assert y.dtype == jnp.float64
+        np.testing.assert_array_equal(
+            np.asarray(x).view(np.uint64), np.asarray(y).view(np.uint64))
+
+
+def test_pin_dtype_pins_momentum_bits_in_f32():
+    """The original pin_f32 contract, restated through the alias: the
+    pinned mul-feeding-add computes mul-then-add bits under jit."""
+    rng = np.random.default_rng(2)
+    m = jnp.asarray(rng.normal(size=1024), jnp.float32)
+    g = jnp.asarray(rng.normal(size=1024), jnp.float32)
+
+    def pinned(m, g, step):
+        return flatmod.pin_dtype(jnp.float32(0.9) * m, step) + g
+
+    got = jax.jit(pinned)(m, g, jnp.int32(3))
+    want = np.asarray(jnp.float32(0.9) * m) + np.asarray(g)
+    np.testing.assert_array_equal(np.asarray(got).view(np.uint32),
+                                  want.astype(np.float32).view(np.uint32))
