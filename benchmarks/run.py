@@ -52,7 +52,7 @@ def main() -> None:
     from benchmarks import (ablation_noniid, fig5_convergence, kernel_bench,
                             sim_bench, table1_cycle_time, table3_isolated,
                             table4_removal, table5_accuracy,
-                            table6_tradeoff)
+                            table6_tradeoff, tta_bench)
 
     suites = {
         "table1": lambda: table1_cycle_time.run(quick=args.quick),
@@ -71,6 +71,9 @@ def main() -> None:
             num_rounds=args.rounds or (40 if args.quick else 150),
             quick=args.quick),
         "kernels": lambda: kernel_bench.run(quick=args.quick),
+        # time-to-accuracy design loop (merges design/tta_search rows
+        # into BENCH_sim.json without clobbering sim_bench's):
+        "tta": lambda: tta_bench.run(quick=args.quick),
         "roofline": _roofline_rows,
         # beyond-paper ablation; opt-in (adds ~10 min):
         #   python -m benchmarks.run --only noniid

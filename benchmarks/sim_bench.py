@@ -194,10 +194,20 @@ def _batched_construct_row(networks, workloads, num_rounds):
             f"target>=5x@{NUM_ROUNDS}r {verdict}")
 
 
+#: name prefixes this bench owns inside BENCH_sim.json; rows from other
+#: benches sharing the file (tta_bench's design/tta_search) survive.
+_OWN_PREFIXES = ("sim/", "design/batched_construct")
+
+
 def _write_json(rows):
+    path = pathlib.Path("BENCH_sim.json")
+    kept = []
+    if path.exists():
+        kept = [r for r in json.loads(path.read_text())
+                if not str(r.get("name", "")).startswith(_OWN_PREFIXES)]
     out = [{"name": n, "us_per_call": round(us, 1), "derived": d}
            for n, us, d in rows]
-    pathlib.Path("BENCH_sim.json").write_text(json.dumps(out, indent=1))
+    path.write_text(json.dumps(out + kept, indent=1))
 
 
 if __name__ == "__main__":

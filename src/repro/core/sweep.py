@@ -67,12 +67,22 @@ class SweepCell:
     num_silos: int
     construct_ms: float     # plan construction (graph algorithms + arrays)
     eval_ms: float          # evaluation (horizon materialization + grid)
+    # Time-to-accuracy columns (``--tta``, multigraph cells only): the
+    # design trained end-to-end (design/evaluate.py), scored by
+    # simulated seconds to its own final smoothed loss. None when the
+    # sweep ran timing-only.
+    tta_s: float | None = None
+    tta_final_acc: float | None = None
+    tta_target_loss: float | None = None
 
     def row(self) -> dict:
         d = self.report.row()
         d.update(t=self.t, num_silos=self.num_silos,
                  construct_ms=round(self.construct_ms, 3),
                  eval_ms=round(self.eval_ms, 3))
+        if self.tta_s is not None:
+            d.update(tta_s=self.tta_s, tta_final_acc=self.tta_final_acc,
+                     tta_target_loss=self.tta_target_loss)
         return d
 
 
@@ -171,6 +181,33 @@ def run_sweep(cfg: SweepConfig, batched: bool = True,
             for rep, m, e in zip(reports, meta, eval_ms)]
 
 
+def attach_tta(cells: list[SweepCell], rounds: int = 40,
+               seed: int = 0) -> list[SweepCell]:
+    """Fill the TTA columns of every multigraph cell by training it.
+
+    Each cell's Algorithm-1 design at its own ``t`` runs through the
+    `design/evaluate.py` evaluator (flat whole-cycle runtime); the
+    target is the run's final smoothed loss, so ``tta_s`` is the
+    simulated wall clock the design needs to converge — the axis the
+    paper actually optimizes, reported next to the cycle-time tables it
+    is usually read off from. Baseline cells pass through unchanged.
+    """
+    from repro.design import evaluate
+
+    out = []
+    for c in cells:
+        if not c.report.topology.startswith("multigraph"):
+            out.append(c)
+            continue
+        r = evaluate.evaluate_design(
+            c.report.network, c.report.workload, t=(c.t or 5),
+            rounds=rounds, seed=seed)
+        out.append(dataclasses.replace(
+            c, tta_s=r.tta_s, tta_final_acc=r.final_acc,
+            tta_target_loss=r.target_loss))
+    return out
+
+
 # ---------------------------------------------------------------------------
 # table formatting
 # ---------------------------------------------------------------------------
@@ -228,6 +265,27 @@ def format_table3(cells: list[SweepCell]) -> str:
             + f"{r.states_with_isolated}/{r.num_states}".rjust(12)
             + f"{r.rounds_with_isolated}/{r.num_rounds}".rjust(12)
             + f"{r.mean_cycle_ms:.1f}".rjust(10) + ring_ms.rjust(10))
+    return "\n".join(lines)
+
+
+def format_tta(cells: list[SweepCell]) -> str:
+    """TTA columns (``--tta``): multigraph cells on the wall-clock
+    time-to-accuracy axis next to their mean cycle time."""
+    lines = ["== TTA: multigraph time-to-accuracy (trained) =="]
+    header = ("network".ljust(9) + "workload".ljust(14) + "t".rjust(3)
+              + "cycle_ms".rjust(10) + "tta_s".rjust(9)
+              + "final_acc".rjust(11) + "target_loss".rjust(13))
+    lines.append(header)
+    for c in cells:
+        if c.tta_s is None:
+            continue
+        r = c.report
+        lines.append(
+            r.network.ljust(9) + r.workload.ljust(14)
+            + str(c.t).rjust(3) + f"{r.mean_cycle_ms:.1f}".rjust(10)
+            + f"{c.tta_s:.2f}".rjust(9)
+            + f"{c.tta_final_acc:.3f}".rjust(11)
+            + f"{c.tta_target_loss:.4f}".rjust(13))
     return "\n".join(lines)
 
 
@@ -299,6 +357,13 @@ def main(argv: list[str] | None = None) -> None:
                          "exit")
     ap.add_argument("--json", default="",
                     help="also dump all cells as JSON to this path")
+    ap.add_argument("--tta", action="store_true",
+                    help="also TRAIN every multigraph cell and report "
+                         "its time-to-accuracy columns (tta_s, "
+                         "final_acc; design/evaluate.py) — much slower "
+                         "than the timing-only sweep")
+    ap.add_argument("--tta-rounds", type=int, default=40,
+                    help="communication rounds per --tta training run")
     args = ap.parse_args(argv)
 
     cfg = SweepConfig(
@@ -317,10 +382,15 @@ def main(argv: list[str] | None = None) -> None:
 
     t0 = time.perf_counter()
     cells = run_sweep(cfg)
+    if args.tta:
+        cells = attach_tta(cells, rounds=args.tta_rounds, seed=cfg.seed)
     wall = time.perf_counter() - t0
     print(format_table1(cells))
     print()
     print(format_table3(cells))
+    if args.tta:
+        print()
+        print(format_tta(cells))
     build = sum(c.construct_ms for c in cells) / 1e3
     ev = sum(c.eval_ms for c in cells) / 1e3
     print(f"\n{len(cells)} cells in {wall:.2f}s "

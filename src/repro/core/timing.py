@@ -544,6 +544,32 @@ def multiplicity_timing_plan(net: NetworkSpec, wl: Workload,
         overlay=overlay)
 
 
+def multiplicity_vector_plan(net: NetworkSpec, wl: Workload,
+                             overlay: SimpleGraph, mults, *,
+                             name: str = "search",
+                             cap_states: int | None = CAP_STATES
+                             ) -> TimingPlan:
+    """`multiplicity_timing_plan` for a FLAT vector aligned with
+    ``overlay.pairs`` — the exchange format of the design search.
+
+    The returned plan carries full provenance (``mg`` + ``overlay``),
+    so `fl/dpasgd.multigraph_plan` can build a training RoundPlan from
+    it exactly as it does from the hand-built Algorithm-1 plan: the
+    searched vector and the paper multigraph train AND are timed
+    through identical constructors, which is what makes time-to-
+    accuracy comparisons between them meaningful.
+    """
+    mults = tuple(int(m) for m in mults)
+    if len(mults) != len(overlay.pairs):
+        raise ValueError(f"multiplicity vector has {len(mults)} entries "
+                         f"for {len(overlay.pairs)} overlay pairs")
+    if any(m < 1 for m in mults):
+        raise ValueError(f"multiplicities must be >= 1, got {mults}")
+    L = {p: m for p, m in zip(overlay.pairs, mults)}
+    return multiplicity_timing_plan(net, wl, overlay, L, name=name,
+                                    cap_states=cap_states)
+
+
 def multigraph_timing_plan(net: NetworkSpec, wl: Workload, *, t: int = 5,
                            overlay: SimpleGraph | None = None,
                            cap_states: int | None = CAP_STATES) -> TimingPlan:

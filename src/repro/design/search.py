@@ -29,10 +29,25 @@ hand-built design's: candidates communicate at least as often as the
 paper's multigraph and are only rewarded for REBALANCING which pairs
 block when. ``--unconstrained`` drops the floor for exploration.
 
+Two objectives (``--objective``):
+
+* ``cycle`` (default) — mean Eq. 4/5 cycle time, as above.
+* ``tta`` — time-to-accuracy (DESIGN.md §13): the cycle-time hill
+  climb becomes a cheap PREFILTER whose scored pool seeds a frontier of
+  top-K candidates, each of which then trains end-to-end on the flat
+  whole-cycle runtime (`design/evaluate.py`, one jitted dispatch per
+  cycle) and is scored by wall-clock seconds to the reference design's
+  final smoothed loss — the throughput-vs-convergence trade-off Marfoq
+  et al. show cannot be read off the communication schedule alone. The
+  hand-built Algorithm-1 design is ALWAYS trained as the reference, so
+  the returned winner provably matches-or-beats it on time-to-accuracy
+  (asserted; the CLI exits non-zero otherwise).
+
 CLI::
 
     python -m repro.design.search                    # all paper networks
     python -m repro.design.search --networks gaia --workloads femnist
+    python -m repro.design.search --objective tta --quick   # CI smoke
     python -m repro.design.search --json out.json
 
 Exits non-zero if any searched design fails to match/beat the paper's
@@ -95,10 +110,12 @@ def multiplicity_plan(net: NetworkSpec, wl: Workload, overlay: SimpleGraph,
                       name: str = "search") -> timing.TimingPlan:
     """TimingPlan for one candidate multiplicity vector (aligned with
     ``overlay.pairs``) — the same constructor the paper's hand-built
-    multigraph goes through, so scores are directly comparable."""
-    L = {p: int(m) for p, m in zip(overlay.pairs, mults)}
-    return timing.multiplicity_timing_plan(net, wl, overlay, L, name=name,
-                                           cap_states=cap_states)
+    multigraph AND the trainer's searched-vector path go through
+    (`timing.multiplicity_vector_plan`), so scores are directly
+    comparable and a searched winner trains on exactly the schedule it
+    was scored with."""
+    return timing.multiplicity_vector_plan(net, wl, overlay, mults,
+                                           name=name, cap_states=cap_states)
 
 
 def score_candidates(net: NetworkSpec, wl: Workload, overlay: SimpleGraph,
@@ -144,6 +161,20 @@ def search_design(net: NetworkSpec, wl: Workload, *, t_max: int = 5,
     at or above the paper design's (see module docstring); the paper
     design sits exactly on the floor, so the guarantee is unaffected.
     """
+    return search_design_pool(net, wl, t_max=t_max, rounds=rounds,
+                              max_iters=max_iters, cap_states=cap_states,
+                              density_floor=density_floor, ctx=ctx)[0]
+
+
+def search_design_pool(net: NetworkSpec, wl: Workload, *, t_max: int = 5,
+                       rounds: int = 6400, max_iters: int = 50,
+                       cap_states: int | None = timing.CAP_STATES,
+                       density_floor: bool = True,
+                       ctx: batched.DesignContext | None = None
+                       ) -> tuple[SearchResult, dict[tuple[int, ...], float]]:
+    """`search_design` plus the full scored pool {vector: mean_ms} of
+    every candidate the hill climb evaluated — the TTA mode's stage-1
+    output (its top-K frontier is drawn from this pool)."""
     t0 = time.perf_counter()
     if ctx is None:
         ctx = batched.DesignContext(net)
@@ -167,8 +198,10 @@ def search_design(net: NetworkSpec, wl: Workload, *, t_max: int = 5,
     floor = strong_fraction(paper) - 1e-12 if density_floor else -np.inf
     seeds = [s for s in seeds if strong_fraction(s) >= floor]
 
+    pool: dict[tuple[int, ...], float] = {}
     scores = score_candidates(net, wl, overlay, seeds, rounds,
                               cap_states=cap_states)
+    pool.update(zip(seeds, (float(s) for s in scores)))
     evals = len(seeds)
     paper_ms = float(scores[seeds.index(paper)])
     best_i = int(np.argmin(scores))
@@ -182,6 +215,7 @@ def search_design(net: NetworkSpec, wl: Workload, *, t_max: int = 5,
             break
         scores = score_candidates(net, wl, overlay, nbrs, rounds,
                                   cap_states=cap_states)
+        pool.update(zip(nbrs, (float(s) for s in scores)))
         evals += len(nbrs)
         i = int(np.argmin(scores))
         if float(scores[i]) >= best_ms:
@@ -207,6 +241,128 @@ def search_design(net: NetworkSpec, wl: Workload, *, t_max: int = 5,
         best_strong_frac=strong_fraction(best),
         static_best=static_name, static_best_ms=float(static_ms),
         evaluations=evals, iterations=iters,
+        elapsed_s=time.perf_counter() - t0), pool
+
+
+# ---------------------------------------------------------------------------
+# stage 2: time-to-accuracy (train the cycle-time frontier)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TTASearchResult:
+    """Two-stage search outcome: cycle-time prefilter + trained frontier.
+
+    ``candidates`` holds one `evaluate.TTAResult` row per TRAINED
+    design, the Algorithm-1 reference first; ``best_*`` is the winner
+    by (reached target, seconds to target) — the reference is in the
+    trained set, so ``best_tta_s <= paper_tta_s`` by construction.
+    """
+
+    stage1: SearchResult
+    train_rounds: int
+    target_loss: float
+    paper_tta_s: float
+    paper_acc: float
+    best_mults: tuple[int, ...]
+    best_tta_s: float
+    best_acc: float
+    best_mean_cycle_ms: float
+    candidates: tuple    # evaluate.TTAResult, reference first
+    elapsed_s: float
+
+    @property
+    def improvement_pct(self) -> float:
+        if self.paper_tta_s == 0.0:
+            return 0.0
+        return 100.0 * (1.0 - self.best_tta_s / self.paper_tta_s)
+
+    def row(self) -> dict:
+        # inf/nan are not valid JSON (json.dump would emit bare
+        # `Infinity` tokens strict parsers reject) -> None.
+        fin = lambda x: float(x) if np.isfinite(x) else None
+        return dict(
+            network=self.stage1.network, workload=self.stage1.workload,
+            objective="tta", train_rounds=self.train_rounds,
+            target_loss=fin(self.target_loss),
+            paper_mults=self.stage1.paper_mults,
+            paper_tta_s=fin(self.paper_tta_s), paper_acc=self.paper_acc,
+            best_mults=self.best_mults, best_tta_s=fin(self.best_tta_s),
+            best_acc=self.best_acc,
+            best_mean_cycle_ms=self.best_mean_cycle_ms,
+            improvement_pct=round(self.improvement_pct, 3),
+            candidates=[c.row() for c in self.candidates],
+            stage1=self.stage1.row(),
+            elapsed_s=self.elapsed_s)
+
+
+def tta_frontier(pool: dict[tuple[int, ...], float],
+                 paper: tuple[int, ...], top_k: int
+                 ) -> list[tuple[int, ...]]:
+    """Top-``top_k`` distinct non-reference vectors of the stage-1 pool
+    by mean cycle time (deterministic: score, then vector, breaks
+    ties). The reference is excluded here because it is always trained
+    separately as the target-setting run."""
+    ranked = sorted((ms, vec) for vec, ms in pool.items() if vec != paper)
+    return [vec for _, vec in ranked[:top_k]]
+
+
+def search_design_tta(net: NetworkSpec, wl: Workload, *, t_max: int = 5,
+                      rounds: int = 6400, max_iters: int = 50,
+                      top_k: int = 3, train_rounds: int = 60,
+                      lr: float = 0.05, batch_size: int = 16,
+                      samples_per_silo: int = 64, seed: int = 0,
+                      density_floor: bool = True,
+                      ctx: batched.DesignContext | None = None
+                      ) -> TTASearchResult:
+    """Two-stage time-to-accuracy search.
+
+    Stage 1 is the batched cycle-time hill climb (`search_design_pool`)
+    as a cheap prefilter; stage 2 trains the Algorithm-1 reference plus
+    the top-``top_k`` frontier of the scored pool end-to-end on the
+    flat whole-cycle runtime through `evaluate.evaluate_frontier` — one
+    shared trace, so K candidates cost ~1 XLA compile + K whole-run
+    dispatches — every run sharing one config except the multiplicity
+    vector (same seed, same data stream). The target loss is the
+    reference's final smoothed loss, which the reference reaches by
+    construction — so the winner-by-TTA over the trained set (reference
+    included) matches-or-beats Algorithm 1 always, and strictly beats
+    it whenever a throughput-better frontier design converges to the
+    same loss in fewer simulated seconds.
+    """
+    from repro.design import evaluate
+
+    t0 = time.perf_counter()
+    stage1, pool = search_design_pool(
+        net, wl, t_max=t_max, rounds=rounds, max_iters=max_iters,
+        density_floor=density_floor, ctx=ctx)
+    paper = stage1.paper_mults
+    frontier = tta_frontier(pool, paper, top_k)
+
+    named = [("algorithm1", paper)] + [
+        (f"searched[{i}]", vec) for i, vec in enumerate(frontier)]
+    results = evaluate.evaluate_frontier(
+        net.name, wl.name, named, rounds=train_rounds, lr=lr,
+        batch_size=batch_size, samples_per_silo=samples_per_silo,
+        seed=seed)
+    ref = results[0]
+
+    # Winner by seconds-to-target; mean cycle time, then trained order,
+    # break ties deterministically. inf (never reached) always loses to
+    # the reference, whose TTA is finite by construction.
+    order = sorted(range(len(results)),
+                   key=lambda i: (results[i].tta_s,
+                                  results[i].mean_cycle_ms, i))
+    win = order[0]
+    best_vec = paper if win == 0 else frontier[win - 1]
+    return TTASearchResult(
+        stage1=stage1, train_rounds=train_rounds,
+        target_loss=ref.target_loss,
+        paper_tta_s=ref.tta_s, paper_acc=ref.final_acc,
+        best_mults=tuple(best_vec), best_tta_s=results[win].tta_s,
+        best_acc=results[win].final_acc,
+        best_mean_cycle_ms=results[win].mean_cycle_ms,
+        candidates=tuple(results),
         elapsed_s=time.perf_counter() - t0)
 
 
@@ -234,18 +390,59 @@ def format_results(results: list[SearchResult]) -> str:
     return "\n".join(lines)
 
 
+def format_tta_results(results: list[TTASearchResult]) -> str:
+    lines = ["== design search: time-to-accuracy (s to target loss), "
+             "searched vs hand-built multigraph =="]
+    header = ("network".ljust(9) + "workload".ljust(14)
+              + "target_loss".rjust(12) + "paper_tta_s".rjust(12)
+              + "best_tta_s".rjust(11) + "improv%".rjust(9)
+              + "paper_acc".rjust(10) + "best_acc".rjust(9)
+              + "trained".rjust(8) + "elapsed_s".rjust(10))
+    lines.append(header)
+    for r in results:
+        lines.append(
+            r.stage1.network.ljust(9) + r.stage1.workload.ljust(14)
+            + f"{r.target_loss:.4f}".rjust(12)
+            + f"{r.paper_tta_s:.2f}".rjust(12)
+            + f"{r.best_tta_s:.2f}".rjust(11)
+            + f"{r.improvement_pct:.2f}".rjust(9)
+            + f"{r.paper_acc:.3f}".rjust(10)
+            + f"{r.best_acc:.3f}".rjust(9)
+            + str(len(r.candidates)).rjust(8)
+            + f"{r.elapsed_s:.1f}".rjust(10))
+    return "\n".join(lines)
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
-        description="Cycle-time-driven multigraph design search "
-                    "(Algorithm 1 is one seed; hill climbing over "
-                    "multiplicity vectors, batched TimingGrid scoring).")
+        description="Multigraph design search. --objective cycle: "
+                    "hill climbing over multiplicity vectors, batched "
+                    "TimingGrid scoring (Algorithm 1 is one seed). "
+                    "--objective tta: the cycle-time climb prefilters, "
+                    "then the top-K frontier trains end-to-end and the "
+                    "winner is picked by wall-clock time to the "
+                    "reference's target loss.")
+    ap.add_argument("--objective", choices=("cycle", "tta"),
+                    default="cycle")
     ap.add_argument("--networks", default=",".join(PAPER_NETWORKS))
     ap.add_argument("--workloads", default="femnist")
     ap.add_argument("--t-max", type=int, default=5)
     ap.add_argument("--rounds", type=int, default=6400)
     ap.add_argument("--max-iters", type=int, default=50)
+    ap.add_argument("--top-k", type=int, default=3,
+                    help="tta: frontier designs trained besides the "
+                         "Algorithm-1 reference")
+    ap.add_argument("--train-rounds", type=int, default=60,
+                    help="tta: communication rounds per training run")
+    ap.add_argument("--samples-per-silo", type=int, default=64)
+    ap.add_argument("--batch-size", type=int, default=16)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sizing: fewer prefilter rounds/iters, "
+                         "top-1 frontier, tiny training runs")
     ap.add_argument("--json", default="",
-                    help="dump SearchResult rows as JSON to this path")
+                    help="dump result rows as JSON to this path")
     ap.add_argument("--unconstrained", action="store_true",
                     help="drop the strong-pair density floor (the "
                          "optimum then degenerates toward all-weak "
@@ -253,30 +450,68 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--no-assert", action="store_true",
                     help="do not fail when best > paper (debug only)")
     args = ap.parse_args(argv)
+    if args.quick:
+        args.rounds = min(args.rounds, 800)
+        args.max_iters = min(args.max_iters, 6)
+        args.top_k = 1
+        args.train_rounds = 12
+        args.samples_per_silo = 32
+        args.batch_size = 8
 
-    results = []
+    results: list = []
     for net_name in (s for s in args.networks.split(",") if s):
         net = get_network(net_name)
         ctx = batched.DesignContext(net)
         for wl_name in (s for s in args.workloads.split(",") if s):
-            results.append(search_design(
-                net, WORKLOADS[wl_name], t_max=args.t_max,
-                rounds=args.rounds, max_iters=args.max_iters,
-                density_floor=not args.unconstrained, ctx=ctx))
-    print(format_results(results))
+            if args.objective == "tta":
+                results.append(search_design_tta(
+                    net, WORKLOADS[wl_name], t_max=args.t_max,
+                    rounds=args.rounds, max_iters=args.max_iters,
+                    top_k=args.top_k, train_rounds=args.train_rounds,
+                    lr=args.lr, batch_size=args.batch_size,
+                    samples_per_silo=args.samples_per_silo,
+                    seed=args.seed,
+                    density_floor=not args.unconstrained, ctx=ctx))
+            else:
+                results.append(search_design(
+                    net, WORKLOADS[wl_name], t_max=args.t_max,
+                    rounds=args.rounds, max_iters=args.max_iters,
+                    density_floor=not args.unconstrained, ctx=ctx))
+    if args.objective == "tta":
+        print(format_tta_results(results))
+        # A non-finite reference TTA (diverged training: NaN losses
+        # poison the smoothed target, every TTA becomes inf) would make
+        # `best > paper` vacuously False — treat it as a gate failure,
+        # not a win.
+        bad = [r for r in results
+               if not np.isfinite(r.paper_tta_s)
+               or r.best_tta_s > r.paper_tta_s]
+    else:
+        print(format_results(results))
+        bad = [r for r in results if r.best_mean_ms > r.paper_mean_ms]
     if args.json:
         with open(args.json, "w") as f:
             json.dump([r.row() for r in results], f, indent=1)
         print(f"wrote {args.json}")
-    bad = [r for r in results if r.best_mean_ms > r.paper_mean_ms]
     if bad:
         for r in bad:
-            print(f"FAIL: {r.network}/{r.workload} search "
-                  f"{r.best_mean_ms} > paper {r.paper_mean_ms}")
+            if args.objective == "tta":
+                why = ("reference never reached its target "
+                       "(diverged training?)"
+                       if not np.isfinite(r.paper_tta_s) else
+                       f"searched tta {r.best_tta_s}s > paper "
+                       f"{r.paper_tta_s}s")
+                print(f"FAIL: {r.stage1.network}/{r.stage1.workload} "
+                      f"{why}")
+            else:
+                print(f"FAIL: {r.network}/{r.workload} search "
+                      f"{r.best_mean_ms} > paper {r.paper_mean_ms}")
         if not args.no_assert:
             return 1
+    metric = ("wall-clock time to target loss"
+              if args.objective == "tta" else "mean cycle time")
     print(f"search matched or beat the hand-built multigraph on "
-          f"{len(results)}/{len(results)} cells")
+          f"{metric} for {len(results)}/{len(results)} cells")
     return 0
 
 

@@ -150,7 +150,8 @@ def matcha_plan(design, num_nodes: int, rounds: int,
 
 
 def make_round_schedule(topology: str, net: NetworkSpec, wl: Workload, *,
-                        t: int = 5, rounds: int = 1, seed: int = 0
+                        t: int = 5, rounds: int = 1, seed: int = 0,
+                        multiplicity=None,
                         ) -> tuple[RoundPlan, timing.TimingPlan]:
     """(RoundPlan, TimingPlan) for any topology in the paper's Table 1.
 
@@ -158,11 +159,29 @@ def make_round_schedule(topology: str, net: NetworkSpec, wl: Workload, *,
     RoundPlan's per-state strong masks come from the TimingPlan's own
     parsed states, so `run_fl` totals and `simulate(...)` reports agree
     for the same config by construction.
+
+    ``multiplicity`` (multigraph only) trains an EXPLICIT multiplicity
+    vector aligned with the Christofides overlay's pairs — the format
+    `repro.design.search` emits — instead of Algorithm 1's assignment.
+    The vector goes through `timing.multiplicity_vector_plan`, i.e. the
+    same constructor that scored it during the search, and the RoundPlan
+    is built from that plan's own parsed states; passing Algorithm 1's
+    vector reproduces the default plan bit-for-bit
+    (tests/test_design_tta.py).
     """
     if topology == "multigraph":
-        tplan = timing.multigraph_timing_plan(net, wl, t=t)
+        if multiplicity is not None:
+            from repro.core.topology import ring_topology
+            overlay = ring_topology(net, wl).graph
+            tplan = timing.multiplicity_vector_plan(
+                net, wl, overlay, multiplicity, name="multigraph(searched)")
+        else:
+            tplan = timing.multigraph_timing_plan(net, wl, t=t)
         plan, _, _ = multigraph_plan(net, wl, t=t, tplan=tplan)
         return plan, tplan
+    if multiplicity is not None:
+        raise ValueError("multiplicity vectors only apply to the "
+                         f"multigraph topology, not {topology!r}")
     if topology == "star":
         design = build_topology("star", net, wl)
         return (static_plan(design.round_graph(0)),

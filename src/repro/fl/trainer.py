@@ -62,6 +62,10 @@ class FLConfig:
     # "flat" = whole-cycle flat-parameter runtime; "legacy" = per-round
     # stacked-pytree steps (kept as the equivalence oracle).
     runtime: str = "flat"
+    # Multigraph only: explicit multiplicity vector aligned with the
+    # Christofides overlay pairs (the design search's exchange format);
+    # None = Algorithm 1's assignment at `t`.
+    multiplicity: tuple[int, ...] | None = None
 
 
 @dataclasses.dataclass
@@ -139,7 +143,8 @@ def run_fl(cfg: FLConfig) -> FLResult:
     # One schedule, two views: the RoundPlan drives training, the
     # TimingPlan it was built from drives the wall-clock axis.
     plan, tplan = dpasgd.make_round_schedule(cfg.topology, net, wl, t=cfg.t,
-                                             rounds=cfg.rounds, seed=cfg.seed)
+                                             rounds=cfg.rounds, seed=cfg.seed,
+                                             multiplicity=cfg.multiplicity)
     key = jax.random.PRNGKey(cfg.seed)
     loss_fn = lambda p, b: spec.loss(p, b)
     test_batch = {"x": jnp.asarray(data.test_x),
