@@ -1,0 +1,131 @@
+"""Fault-injection scenario matrix: static vs adaptive time-to-accuracy.
+
+Runs the self-healing controller harness (`repro.design.controller`)
+over the named fault scenarios on the paper's gaia/FEMNIST cell, each
+scenario twice — a STATIC fleet (fixed schedule, waits out the timeout
+on every degraded round) and an ADAPTIVE one (timeout paid once per
+staleness streak + live re-planning at segment boundaries). Every run
+shares one jitted whole-cycle function (zero-recompile invariant,
+asserted), one data stream and one init, so the matrix differences are
+purely the fault model and the policy.
+
+Asserts: under ``nominal`` the two policies are bit-exact (losses AND
+clock); under every fault scenario adaptive time-to-target-loss is at
+least as good as static, and strictly better on the headline trio
+(drift, flash, churn) — the PR acceptance gate CI re-checks.
+
+Rows merge into BENCH_sim.json under the ``faults/`` prefix (the
+`sim_bench._OWN_PREFIXES` protocol: each bench replaces only its own
+rows). The full matrix additionally lands in ``faults_matrix.json``
+for the CI artifact.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+BENCH_PATH = pathlib.Path("BENCH_sim.json")
+MATRIX_PATH = pathlib.Path("faults_matrix.json")
+ROW_PREFIX = "faults/"
+
+#: Scenarios where adaptive must STRICTLY beat static on TTA.
+STRICT_SCENARIOS = ("drift", "flash", "churn")
+SCENARIO_ORDER = ("nominal", "drift", "flash", "churn", "outage")
+
+
+def run(quick: bool = False, out_json: pathlib.Path | str = MATRIX_PATH):
+    from repro.design.controller import ControllerConfig, ControllerHarness
+
+    if quick:
+        cfg = ControllerConfig(rounds=24, replan_every=12,
+                               samples_per_silo=32, batch_size=8)
+    else:
+        cfg = ControllerConfig()
+    harness = ControllerHarness(cfg)
+
+    rows = []
+    matrix = []
+    for name in SCENARIO_ORDER:
+        t0 = time.perf_counter()
+        static = harness.run(name, adaptive=False)
+        adaptive = harness.run(name, adaptive=True)
+        wall_s = time.perf_counter() - t0
+        if name == "nominal":
+            assert np.array_equal(static.losses, adaptive.losses), \
+                "nominal: adaptive losses diverged from static"
+            assert np.array_equal(static.cycle_times_ms,
+                                  adaptive.cycle_times_ms), \
+                "nominal: adaptive clock diverged from static"
+            assert not adaptive.swap_rounds, \
+                f"nominal: controller swapped at {adaptive.swap_rounds}"
+        # Target: the worse of the two smoothed-loss minima — provably
+        # reached by both runs, so TTA compares wall clocks, never inf.
+        from repro.design.evaluate import smoothed_losses
+
+        target = float(max(smoothed_losses(static.losses).min(),
+                           smoothed_losses(adaptive.losses).min())
+                       * (1 + 1e-9))
+        tta_s = static.tta_s(target)
+        tta_a = adaptive.tta_s(target)
+        assert tta_a <= tta_s, \
+            f"{name}: adaptive tta {tta_a}s worse than static {tta_s}s"
+        if name in STRICT_SCENARIOS:
+            assert tta_a < tta_s, \
+                f"{name}: adaptive tta {tta_a}s not strictly better " \
+                f"than static {tta_s}s"
+        cell = dict(
+            scenario=name, rounds=cfg.rounds,
+            static_total_s=round(static.total_time_s, 4),
+            adaptive_total_s=round(adaptive.total_time_s, 4),
+            target_loss=round(target, 5),
+            static_tta_s=round(tta_s, 4), adaptive_tta_s=round(tta_a, 4),
+            swaps=list(adaptive.swap_rounds),
+            vectors=[list(v) for v in adaptive.vectors],
+            static_demoted=static.demoted_rounds,
+            adaptive_demoted=adaptive.demoted_rounds,
+            static_acc=round(static.final_acc, 4),
+            adaptive_acc=round(adaptive.final_acc, 4))
+        matrix.append(cell)
+        rows.append((
+            f"{ROW_PREFIX}{name}/{cfg.network}/{cfg.workload}",
+            wall_s * 1e6,
+            f"static_s={static.total_time_s:.2f} "
+            f"adaptive_s={adaptive.total_time_s:.2f} "
+            f"tta_static_s={tta_s:.2f} tta_adaptive_s={tta_a:.2f} "
+            f"swaps={len(adaptive.swap_rounds)} "
+            f"demoted={static.demoted_rounds} "
+            f"strict={tta_a < tta_s}"))
+    harness.assert_single_trace()
+    rows.append((f"{ROW_PREFIX}zero_recompile", 0.0,
+                 f"trace_count={harness.trace_count} scenarios="
+                 f"{len(SCENARIO_ORDER)} runs={2 * len(SCENARIO_ORDER)}"))
+
+    _merge_json(rows)
+    out = pathlib.Path(out_json)
+    out.write_text(json.dumps(
+        dict(network=cfg.network, workload=cfg.workload,
+             rounds=cfg.rounds, replan_every=cfg.replan_every,
+             trace_count=harness.trace_count, cells=matrix), indent=1))
+    return rows
+
+
+def _merge_json(rows):
+    """Replace this bench's rows inside BENCH_sim.json, keep the rest."""
+    existing = []
+    if BENCH_PATH.exists():
+        existing = [r for r in json.loads(BENCH_PATH.read_text())
+                    if not str(r.get("name", "")).startswith(ROW_PREFIX)]
+    existing += [{"name": n, "us_per_call": round(us, 1), "derived": d}
+                 for n, us, d in rows]
+    BENCH_PATH.write_text(json.dumps(existing, indent=1))
+
+
+if __name__ == "__main__":
+    import sys
+
+    for name, us, derived in run(quick="--quick" in sys.argv):
+        print(f"{name},{us:.1f},{derived}")

@@ -49,9 +49,9 @@ def main() -> None:
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (ablation_noniid, fig5_convergence, kernel_bench,
-                            sim_bench, table1_cycle_time, table3_isolated,
-                            table4_removal, table5_accuracy,
+    from benchmarks import (ablation_noniid, faults_bench, fig5_convergence,
+                            kernel_bench, sim_bench, table1_cycle_time,
+                            table3_isolated, table4_removal, table5_accuracy,
                             table6_tradeoff, tta_bench)
 
     suites = {
@@ -74,6 +74,9 @@ def main() -> None:
         # time-to-accuracy design loop (merges design/tta_search rows
         # into BENCH_sim.json without clobbering sim_bench's):
         "tta": lambda: tta_bench.run(quick=args.quick),
+        # fault-injection scenario matrix, static vs adaptive TTA
+        # (merges faults/ rows; writes faults_matrix.json):
+        "faults": lambda: faults_bench.run(quick=args.quick),
         "roofline": _roofline_rows,
         # beyond-paper ablation; opt-in (adds ~10 min):
         #   python -m benchmarks.run --only noniid

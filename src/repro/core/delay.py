@@ -30,6 +30,7 @@ Eq. 5: cycle time of round k = max over strong pairs (and lone nodes) of
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import numpy as np
 
@@ -176,3 +177,121 @@ class MultigraphDelayTracker:
         self.last_type = dict(state.edge_type)
         self.prev_tau = tau
         return tau
+
+
+@dataclasses.dataclass
+class FaultedDelayTracker:
+    """Scalar twin of `repro.faults.engine.FaultedSession` (Eq. 4 under
+    observed conditions + timeout demotion + bounded staleness).
+
+    Python floats and per-pair if/else instead of arrays — an
+    independent implementation used as the test oracle for the
+    vectorized engine, exactly as `MultigraphDelayTracker` is the
+    oracle for the nominal recurrence. Inputs per round are plain
+    observations (per-silo link/compute scales, down silos), so this
+    module stays independent of `repro.faults`.
+    """
+
+    net: NetworkSpec
+    wl: Workload
+    overlay: SimpleGraph
+    timeout_ms: float = float("inf")
+    max_stale: int = 8
+    adaptive: bool = False
+
+    def __post_init__(self):
+        base = graph_pair_delays(self.net, self.wl, self.overlay)
+        self.d_cur: dict[Pair, float] = dict(base)
+        self.d_prev: dict[Pair, float] = dict(base)
+        self.prev_eff: set[Pair] = set()
+        self.prev_tau: float | None = None
+        self.streak: dict[Pair, int] = {p: 0 for p in self.overlay.pairs}
+        self.silo_streak: dict[int, int] = {
+            n: 0 for n in range(self.overlay.num_nodes)}
+        self.comp = self.wl.compute_ms(self.net)
+
+    def round_cycle_time(self, planned: set, link_scale, comp_scale,
+                         crashed: set, flapped: set = frozenset()
+                         ) -> tuple[float, set]:
+        """Advance one round; returns (tau, effective strong pairs).
+
+        ``planned`` — the plan's strong pairs this round; ``link_scale``
+        / ``comp_scale`` — per-silo multipliers (sequences of length N);
+        ``crashed``/``flapped`` — down silo indices.
+        """
+        down = set(crashed) | set(flapped)
+        first = self.prev_tau is None
+        nxt: dict[Pair, float] = {}
+        eff: set[Pair] = set()
+        tau = float("-inf")      # observed (wall clock)
+        tau_lat = float("-inf")  # latent (nominal units, drives Eq. 4)
+        paid = False
+        for p in self.overlay.pairs:
+            i, j = p
+            u_tc = float(max(self.comp[i], self.comp[j]))
+            if first:
+                cand_s = cand_w = self.d_cur[p]
+            elif p in self.prev_eff:
+                cand_s = self.d_cur[p]
+                cand_w = self.prev_tau
+            else:
+                v = self.d_cur[p] - self.d_prev[p]
+                cand_s = u_tc if u_tc > v else v
+                cand_w = self.prev_tau + self.d_cur[p]
+            obs = (cand_s * max(link_scale[i], link_scale[j])
+                   + (max(float(self.comp[i]) * comp_scale[i],
+                          float(self.comp[j]) * comp_scale[j]) - u_tc))
+            is_dead = i in down or j in down
+            is_planned = p in planned
+            want = is_planned and (is_dead or obs > self.timeout_ms)
+            forced = (is_planned and not is_dead
+                      and self.streak[p] >= self.max_stale)
+            demoted = want and not forced
+            if is_planned and not demoted:
+                eff.add(p)
+                if obs > tau:
+                    tau = obs
+                if cand_s > tau_lat:
+                    tau_lat = cand_s
+            if demoted and (not self.adaptive or self.streak[p] == 0):
+                paid = True
+            nxt[p] = cand_s if (is_planned and not demoted) else cand_w
+            # Buffer age: grows on demotion, holds on planned-weak
+            # rounds, resets only on an effective strong exchange.
+            if demoted:
+                self.streak[p] += 1
+            elif is_planned:
+                self.streak[p] = 0
+        if paid and math.isfinite(self.timeout_ms) and self.timeout_ms > tau:
+            tau = self.timeout_ms
+        in_eff = {n for p in eff for n in p}
+        finite_to = math.isfinite(self.timeout_ms)
+        for n in range(self.overlay.num_nodes):
+            cv = float(self.comp[n]) * comp_scale[n]
+            lone_straggle = (n not in in_eff and n not in crashed
+                             and cv > self.timeout_ms)
+            if n in in_eff:
+                self.silo_streak[n] = 0
+                continue
+            cn = float(self.comp[n])
+            if cn > tau_lat:
+                tau_lat = cn
+            if n not in crashed:
+                if not lone_straggle:
+                    if cv > tau:
+                        tau = cv
+                elif finite_to:
+                    if not self.adaptive or self.silo_streak[n] == 0:
+                        if self.timeout_ms > tau:
+                            tau = self.timeout_ms
+            self.silo_streak[n] = (self.silo_streak[n] + 1
+                                   if lone_straggle else 0)
+        if not math.isfinite(tau_lat):
+            tau_lat = 0.0
+        if not math.isfinite(tau):
+            tau = 0.0
+        self.d_prev = dict(self.d_cur)
+        self.d_cur = nxt
+        self.prev_eff = eff
+        self.prev_tau = tau_lat
+        return tau, eff

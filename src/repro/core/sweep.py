@@ -35,6 +35,8 @@ import dataclasses
 import json
 import time
 
+import numpy as np
+
 from repro.core import timing
 from repro.core.delay import WORKLOADS
 from repro.core.timing import CycleTimeReport
@@ -56,6 +58,7 @@ class SweepConfig:
     t_values: tuple[int, ...] = (5,)
     num_rounds: int = 6400
     seed: int = 0
+    scenario: str = "nominal"   # named FaultSchedule (repro.faults)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +77,11 @@ class SweepCell:
     tta_s: float | None = None
     tta_final_acc: float | None = None
     tta_target_loss: float | None = None
+    # Faulted columns (``--scenario``, non-nominal only): the same cell
+    # re-timed under a named FaultSchedule (repro.faults).
+    scenario: str | None = None
+    scenario_total_s: float | None = None
+    scenario_mean_ms: float | None = None
 
     def row(self) -> dict:
         d = self.report.row()
@@ -83,6 +91,10 @@ class SweepCell:
         if self.tta_s is not None:
             d.update(tta_s=self.tta_s, tta_final_acc=self.tta_final_acc,
                      tta_target_loss=self.tta_target_loss)
+        if self.scenario is not None:
+            d.update(scenario=self.scenario,
+                     scenario_total_s=self.scenario_total_s,
+                     scenario_mean_ms=self.scenario_mean_ms)
         return d
 
 
@@ -208,6 +220,54 @@ def attach_tta(cells: list[SweepCell], rounds: int = 40,
     return out
 
 
+def scenario_cycle_times(plan: timing.TimingPlan, scenario,
+                         num_rounds: int) -> np.ndarray:
+    """Per-round cycle times of one cell under a fault scenario.
+
+    Recurrence cells (multigraph) run the full faulted Eq. 4 engine
+    (`repro.faults.FaultedSession`, static clock accounting — the sweep
+    times SCHEDULES, the adaptive controller lives in
+    `design/controller.py`). Cyclic/sampled cells have no per-pair
+    recurrence to degrade, so they get the coarse documented model:
+    the nominal series scaled by the round's worst silo link/compute
+    multiplier (crashes are not modeled for them). Under the nominal
+    scenario both paths are bit-exact with ``plan.cycle_times`` —
+    asserted by ``--check``.
+    """
+    from repro.faults import DegradePolicy, FaultedSession
+
+    if plan.kind == "recurrence":
+        policy = DegradePolicy(timeout_ms=scenario.timeout_ms,
+                               max_stale=scenario.max_stale, adaptive=False)
+        return FaultedSession(plan, schedule=scenario.schedule,
+                              policy=policy).advance(num_rounds).taus
+    times = plan.cycle_times(num_rounds)
+    arr = scenario.schedule.arrays(np.arange(num_rounds), plan.num_nodes)
+    scale = np.maximum(arr.link_scale.max(axis=1),
+                       arr.comp_scale.max(axis=1))
+    return times * scale
+
+
+def attach_scenario(cells: list[SweepCell], cfg: SweepConfig
+                    ) -> list[SweepCell]:
+    """Fill the scenario columns of every cell by re-timing it under
+    ``cfg.scenario`` (plans are rebuilt through the shared constructor;
+    construction is cheap next to evaluation)."""
+    from repro.faults import get_scenario
+
+    sc = get_scenario(cfg.scenario)
+    plans, _ = build_sweep_plans(cfg, shared=True)
+    assert len(plans) == len(cells)
+    out = []
+    for c, plan in zip(cells, plans):
+        taus = scenario_cycle_times(plan, sc, cfg.num_rounds)
+        out.append(dataclasses.replace(
+            c, scenario=cfg.scenario,
+            scenario_total_s=float(taus.sum()) / 1e3,
+            scenario_mean_ms=float(taus.mean())))
+    return out
+
+
 # ---------------------------------------------------------------------------
 # table formatting
 # ---------------------------------------------------------------------------
@@ -289,6 +349,26 @@ def format_tta(cells: list[SweepCell]) -> str:
     return "\n".join(lines)
 
 
+def format_scenario(cells: list[SweepCell]) -> str:
+    """Faulted columns (``--scenario``): total/mean under the fault
+    schedule next to the nominal numbers."""
+    lines = [f"== scenario '{cells[0].scenario}': faulted timing =="]
+    header = ("topology".ljust(18) + "network".ljust(9) + "workload".ljust(14)
+              + "nominal_s".rjust(11) + "faulted_s".rjust(11)
+              + "slowdown".rjust(10))
+    lines.append(header)
+    for c in cells:
+        r = c.report
+        slow = (c.scenario_total_s / r.total_time_s
+                if r.total_time_s else float("nan"))
+        lines.append(
+            r.topology.ljust(18) + r.network.ljust(9) + r.workload.ljust(14)
+            + f"{r.total_time_s:.1f}".rjust(11)
+            + f"{c.scenario_total_s:.1f}".rjust(11)
+            + f"{slow:.2f}x".rjust(10))
+    return "\n".join(lines)
+
+
 def consistency_check(cfg: SweepConfig) -> None:
     """Assert the batched paths == the per-cell oracles, bit-for-bit:
 
@@ -297,7 +377,11 @@ def consistency_check(cfg: SweepConfig) -> None:
     * batched `TimingGrid` evaluation — with AND without per-cell
       retirement — == per-cell evaluation;
     * MATCHA trainer total == report total past the old 512-round
-      tiled period.
+      tiled period;
+    * the nominal fault scenario is the identity: every cell's
+      `scenario_cycle_times(..., nominal, R)` series equals
+      ``plan.cycle_times(R)`` bit-for-bit (the `--scenario` flag's
+      default cannot perturb today's output).
 
     Raises on any mismatch."""
     plans, _ = build_sweep_plans(cfg, shared=True)
@@ -332,8 +416,17 @@ def consistency_check(cfg: SweepConfig) -> None:
             raise AssertionError(
                 f"matcha trainer total {trainer_total!r} != report total "
                 f"{report_total!r} at rounds={rounds}")
+    from repro.faults import get_scenario
+    nominal = get_scenario("nominal")
+    for p in plans:
+        faulted = scenario_cycle_times(p, nominal, cfg.num_rounds)
+        if not np.array_equal(faulted, p.cycle_times(cfg.num_rounds)):
+            raise AssertionError(
+                f"nominal scenario is not the identity on {p.topology}/"
+                f"{p.network}/{p.workload}")
     print(f"consistency_check OK: {len(batched)} cells bit-exact "
-          f"(shared construction, batched grid, retirement on+off), "
+          f"(shared construction, batched grid, retirement on+off, "
+          f"nominal fault scenario identity), "
           f"matcha trainer==report@{max(520, cfg.num_rounds)}r")
 
 
@@ -364,6 +457,10 @@ def main(argv: list[str] | None = None) -> None:
                          "than the timing-only sweep")
     ap.add_argument("--tta-rounds", type=int, default=40,
                     help="communication rounds per --tta training run")
+    ap.add_argument("--scenario", default="nominal",
+                    help="named fault scenario (repro.faults.SCENARIOS) to "
+                         "re-time every cell under; 'nominal' (default) "
+                         "changes nothing — asserted in --check")
     args = ap.parse_args(argv)
 
     cfg = SweepConfig(
@@ -371,7 +468,7 @@ def main(argv: list[str] | None = None) -> None:
         networks=tuple(s for s in args.networks.split(",") if s),
         workloads=tuple(s for s in args.workloads.split(",") if s),
         t_values=tuple(int(s) for s in args.t.split(",") if s),
-        num_rounds=args.rounds)
+        num_rounds=args.rounds, scenario=args.scenario)
     if args.quick:
         cfg = dataclasses.replace(
             cfg, networks=("gaia", "geant"), workloads=("femnist",))
@@ -384,6 +481,8 @@ def main(argv: list[str] | None = None) -> None:
     cells = run_sweep(cfg)
     if args.tta:
         cells = attach_tta(cells, rounds=args.tta_rounds, seed=cfg.seed)
+    if cfg.scenario != "nominal":
+        cells = attach_scenario(cells, cfg)
     wall = time.perf_counter() - t0
     print(format_table1(cells))
     print()
@@ -391,6 +490,9 @@ def main(argv: list[str] | None = None) -> None:
     if args.tta:
         print()
         print(format_tta(cells))
+    if cfg.scenario != "nominal":
+        print()
+        print(format_scenario(cells))
     build = sum(c.construct_ms for c in cells) / 1e3
     ev = sum(c.eval_ms for c in cells) / 1e3
     print(f"\n{len(cells)} cells in {wall:.2f}s "

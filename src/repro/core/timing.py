@@ -489,7 +489,10 @@ def multiplicity_timing_plan(net: NetworkSpec, wl: Workload,
                              multiplicity: dict, *,
                              name: str = "multigraph",
                              cap_states: int | None = CAP_STATES,
-                             mg: Multigraph | None = None) -> TimingPlan:
+                             mg: Multigraph | None = None,
+                             d0_override: np.ndarray | None = None,
+                             comp_override: np.ndarray | None = None
+                             ) -> TimingPlan:
     """Recurrence plan for an EXPLICIT multiplicity assignment.
 
     Algorithm 1 is one way to pick ``multiplicity``; the design search
@@ -497,6 +500,11 @@ def multiplicity_timing_plan(net: NetworkSpec, wl: Workload,
     the overlay pairs, and both funnel through this constructor so a
     searched candidate and the paper's hand-built multigraph are scored
     by the identical Eq. 4 arrays.
+
+    ``d0_override``/``comp_override`` replace the NOMINAL Eq. 3 pair
+    delays / per-silo compute with OBSERVED estimates (`repro.faults`:
+    scenario planning and the self-healing controller re-plan from the
+    measured window). ``None`` keeps today's nominal path bit-for-bit.
     """
     from repro.core import parsing
 
@@ -507,8 +515,15 @@ def multiplicity_timing_plan(net: NetworkSpec, wl: Workload,
     num_pairs = len(pairs)
     pair_i = np.fromiter((p[0] for p in pairs), np.int64, num_pairs)
     pair_j = np.fromiter((p[1] for p in pairs), np.int64, num_pairs)
-    comp = wl.compute_ms(net).astype(np.float64)
-    d0 = pair_delay_vector(net, wl, pair_i, pair_j, overlay.degrees())
+    comp = (wl.compute_ms(net).astype(np.float64) if comp_override is None
+            else np.asarray(comp_override, np.float64))
+    if comp.shape != (net.num_silos,):
+        raise ValueError(f"comp_override shape {comp.shape} != "
+                         f"({net.num_silos},)")
+    d0 = (pair_delay_vector(net, wl, pair_i, pair_j, overlay.degrees())
+          if d0_override is None else np.asarray(d0_override, np.float64))
+    if d0.shape != (num_pairs,):
+        raise ValueError(f"d0_override shape {d0.shape} != ({num_pairs},)")
     pair_comp = np.maximum(comp[pair_i], comp[pair_j])
 
     # Algorithm 2 in closed form: the countdown makes pair p STRONG in
@@ -547,7 +562,9 @@ def multiplicity_timing_plan(net: NetworkSpec, wl: Workload,
 def multiplicity_vector_plan(net: NetworkSpec, wl: Workload,
                              overlay: SimpleGraph, mults, *,
                              name: str = "search",
-                             cap_states: int | None = CAP_STATES
+                             cap_states: int | None = CAP_STATES,
+                             d0_override: np.ndarray | None = None,
+                             comp_override: np.ndarray | None = None
                              ) -> TimingPlan:
     """`multiplicity_timing_plan` for a FLAT vector aligned with
     ``overlay.pairs`` — the exchange format of the design search.
@@ -567,7 +584,9 @@ def multiplicity_vector_plan(net: NetworkSpec, wl: Workload,
         raise ValueError(f"multiplicities must be >= 1, got {mults}")
     L = {p: m for p, m in zip(overlay.pairs, mults)}
     return multiplicity_timing_plan(net, wl, overlay, L, name=name,
-                                    cap_states=cap_states)
+                                    cap_states=cap_states,
+                                    d0_override=d0_override,
+                                    comp_override=comp_override)
 
 
 def multigraph_timing_plan(net: NetworkSpec, wl: Workload, *, t: int = 5,

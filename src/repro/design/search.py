@@ -48,7 +48,15 @@ CLI::
     python -m repro.design.search                    # all paper networks
     python -m repro.design.search --networks gaia --workloads femnist
     python -m repro.design.search --objective tta --quick   # CI smoke
+    python -m repro.design.search --scenario drift   # plan for a fault
     python -m repro.design.search --json out.json
+
+``--scenario NAME`` (registry: `repro.faults.SCENARIOS`) scores every
+candidate against the scenario's horizon-mean OBSERVED delays
+(`faults.scenario_overrides`) instead of nominal Eq. 3 — the offline
+twin of the fault controller's online re-planning. The default
+``nominal`` passes no overrides and is byte-identical to omitting the
+flag.
 
 Exits non-zero if any searched design fails to match/beat the paper's
 hand-built multigraph (``--no-assert`` to disable).
@@ -107,24 +115,35 @@ class SearchResult:
 
 def multiplicity_plan(net: NetworkSpec, wl: Workload, overlay: SimpleGraph,
                       mults, *, cap_states: int | None = timing.CAP_STATES,
-                      name: str = "search") -> timing.TimingPlan:
+                      name: str = "search",
+                      d0_override: np.ndarray | None = None,
+                      comp_override: np.ndarray | None = None
+                      ) -> timing.TimingPlan:
     """TimingPlan for one candidate multiplicity vector (aligned with
     ``overlay.pairs``) — the same constructor the paper's hand-built
     multigraph AND the trainer's searched-vector path go through
     (`timing.multiplicity_vector_plan`), so scores are directly
     comparable and a searched winner trains on exactly the schedule it
-    was scored with."""
+    was scored with. The overrides score against OBSERVED delays
+    (scenario planning / the fault controller) instead of nominal
+    Eq. 3."""
     return timing.multiplicity_vector_plan(net, wl, overlay, mults,
-                                           name=name, cap_states=cap_states)
+                                           name=name, cap_states=cap_states,
+                                           d0_override=d0_override,
+                                           comp_override=comp_override)
 
 
 def score_candidates(net: NetworkSpec, wl: Workload, overlay: SimpleGraph,
                      candidates, rounds: int, *,
-                     cap_states: int | None = timing.CAP_STATES
+                     cap_states: int | None = timing.CAP_STATES,
+                     d0_override: np.ndarray | None = None,
+                     comp_override: np.ndarray | None = None
                      ) -> np.ndarray:
     """Mean cycle time (ms) of each candidate vector, via one batched
     `TimingGrid` over the whole candidate set."""
-    plans = [multiplicity_plan(net, wl, overlay, c, cap_states=cap_states)
+    plans = [multiplicity_plan(net, wl, overlay, c, cap_states=cap_states,
+                               d0_override=d0_override,
+                               comp_override=comp_override)
              for c in candidates]
     grid = timing.build_timing_grid(plans)
     return np.array([r.mean_cycle_ms for r in grid.reports(rounds)])
@@ -150,6 +169,8 @@ def search_design(net: NetworkSpec, wl: Workload, *, t_max: int = 5,
                   rounds: int = 6400, max_iters: int = 50,
                   cap_states: int | None = timing.CAP_STATES,
                   density_floor: bool = True,
+                  d0_override: np.ndarray | None = None,
+                  comp_override: np.ndarray | None = None,
                   ctx: batched.DesignContext | None = None) -> SearchResult:
     """Hill-climb multiplicity vectors over the Christofides overlay.
 
@@ -160,16 +181,24 @@ def search_design(net: NetworkSpec, wl: Workload, *, t_max: int = 5,
     ``density_floor`` keeps every candidate's mean strong-pair density
     at or above the paper design's (see module docstring); the paper
     design sits exactly on the floor, so the guarantee is unaffected.
+    ``d0_override``/``comp_override`` score every candidate against
+    observed (scenario) delays instead of nominal Eq. 3; the seeds and
+    the floor are unchanged, so the match-or-beat guarantee holds per
+    scenario too.
     """
     return search_design_pool(net, wl, t_max=t_max, rounds=rounds,
                               max_iters=max_iters, cap_states=cap_states,
-                              density_floor=density_floor, ctx=ctx)[0]
+                              density_floor=density_floor,
+                              d0_override=d0_override,
+                              comp_override=comp_override, ctx=ctx)[0]
 
 
 def search_design_pool(net: NetworkSpec, wl: Workload, *, t_max: int = 5,
                        rounds: int = 6400, max_iters: int = 50,
                        cap_states: int | None = timing.CAP_STATES,
                        density_floor: bool = True,
+                       d0_override: np.ndarray | None = None,
+                       comp_override: np.ndarray | None = None,
                        ctx: batched.DesignContext | None = None
                        ) -> tuple[SearchResult, dict[tuple[int, ...], float]]:
     """`search_design` plus the full scored pool {vector: mean_ms} of
@@ -200,7 +229,9 @@ def search_design_pool(net: NetworkSpec, wl: Workload, *, t_max: int = 5,
 
     pool: dict[tuple[int, ...], float] = {}
     scores = score_candidates(net, wl, overlay, seeds, rounds,
-                              cap_states=cap_states)
+                              cap_states=cap_states,
+                              d0_override=d0_override,
+                              comp_override=comp_override)
     pool.update(zip(seeds, (float(s) for s in scores)))
     evals = len(seeds)
     paper_ms = float(scores[seeds.index(paper)])
@@ -214,7 +245,9 @@ def search_design_pool(net: NetworkSpec, wl: Workload, *, t_max: int = 5,
         if not nbrs:
             break
         scores = score_candidates(net, wl, overlay, nbrs, rounds,
-                                  cap_states=cap_states)
+                                  cap_states=cap_states,
+                                  d0_override=d0_override,
+                                  comp_override=comp_override)
         pool.update(zip(nbrs, (float(s) for s in scores)))
         evals += len(nbrs)
         i = int(np.argmin(scores))
@@ -438,6 +471,12 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--batch-size", type=int, default=16)
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scenario", default="nominal",
+                    help="fault scenario to plan for (repro.faults."
+                         "SCENARIOS): candidates are scored against the "
+                         "scenario's horizon-mean observed delays; "
+                         "'nominal' is byte-identical to omitting the "
+                         "flag")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke sizing: fewer prefilter rounds/iters, "
                          "top-1 frontier, tiny training runs")
@@ -450,6 +489,9 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--no-assert", action="store_true",
                     help="do not fail when best > paper (debug only)")
     args = ap.parse_args(argv)
+    if args.scenario != "nominal" and args.objective == "tta":
+        ap.error("--scenario only supports --objective cycle (the TTA "
+                 "stage trains on the nominal clock)")
     if args.quick:
         args.rounds = min(args.rounds, 800)
         args.max_iters = min(args.max_iters, 6)
@@ -463,6 +505,14 @@ def main(argv: list[str] | None = None) -> int:
         net = get_network(net_name)
         ctx = batched.DesignContext(net)
         for wl_name in (s for s in args.workloads.split(",") if s):
+            d0_ov = comp_ov = None
+            if args.scenario != "nominal":
+                from repro.faults import get_scenario, scenario_overrides
+
+                wl = WORKLOADS[wl_name]
+                d0_ov, comp_ov = scenario_overrides(
+                    get_scenario(args.scenario), net, wl,
+                    ctx.ring_graph(wl), args.rounds)
             if args.objective == "tta":
                 results.append(search_design_tta(
                     net, WORKLOADS[wl_name], t_max=args.t_max,
@@ -476,7 +526,8 @@ def main(argv: list[str] | None = None) -> int:
                 results.append(search_design(
                     net, WORKLOADS[wl_name], t_max=args.t_max,
                     rounds=args.rounds, max_iters=args.max_iters,
-                    density_floor=not args.unconstrained, ctx=ctx))
+                    density_floor=not args.unconstrained,
+                    d0_override=d0_ov, comp_override=comp_ov, ctx=ctx))
     if args.objective == "tta":
         print(format_tta_results(results))
         # A non-finite reference TTA (diverged training: NaN losses

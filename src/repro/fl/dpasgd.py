@@ -151,7 +151,7 @@ def matcha_plan(design, num_nodes: int, rounds: int,
 
 def make_round_schedule(topology: str, net: NetworkSpec, wl: Workload, *,
                         t: int = 5, rounds: int = 1, seed: int = 0,
-                        multiplicity=None,
+                        multiplicity=None, overlay: SimpleGraph | None = None,
                         ) -> tuple[RoundPlan, timing.TimingPlan]:
     """(RoundPlan, TimingPlan) for any topology in the paper's Table 1.
 
@@ -168,15 +168,22 @@ def make_round_schedule(topology: str, net: NetworkSpec, wl: Workload, *,
     is built from that plan's own parsed states; passing Algorithm 1's
     vector reproduces the default plan bit-for-bit
     (tests/test_design_tta.py).
+
+    ``overlay`` (multigraph only) reuses a prebuilt overlay graph
+    instead of re-deriving the Christofides tour — callers that build
+    several schedules over one overlay (the fault controller) pass it
+    so every plan shares the identical pair order.
     """
     if topology == "multigraph":
         if multiplicity is not None:
-            from repro.core.topology import ring_topology
-            overlay = ring_topology(net, wl).graph
+            if overlay is None:
+                from repro.core.topology import ring_topology
+                overlay = ring_topology(net, wl).graph
             tplan = timing.multiplicity_vector_plan(
                 net, wl, overlay, multiplicity, name="multigraph(searched)")
         else:
-            tplan = timing.multigraph_timing_plan(net, wl, t=t)
+            tplan = timing.multigraph_timing_plan(net, wl, t=t,
+                                                  overlay=overlay)
         plan, _, _ = multigraph_plan(net, wl, t=t, tplan=tplan)
         return plan, tplan
     if multiplicity is not None:

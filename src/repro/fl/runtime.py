@@ -79,6 +79,18 @@ class FlatRuntime:
     def num_rounds_cycle(self) -> int:
         return self.strong.shape[0]
 
+    def expand_pair_mask(self, pair_mask: np.ndarray) -> np.ndarray:
+        """Per-PAIR rounds mask -> this runtime's dst-sorted directed
+        layout (pair e owns directed edges 2e, 2e+1). This is how the
+        fault layer feeds degraded strong sets to the compiled cycle
+        function: same CSR structure, different runtime argument —
+        a silo whose edges all go weak simply reads stale buffers
+        (and an all-crashed destination row aggregates over an empty
+        CSR row, which `edge_aggregate` handles by construction).
+        """
+        from repro.faults.degrade import pair_rounds_to_directed
+        return pair_rounds_to_directed(self.order, pair_mask)
+
 
 def make_flat_runtime(plan: RoundPlan, template_params: Params,
                       num_silos: int) -> FlatRuntime:

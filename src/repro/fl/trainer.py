@@ -28,7 +28,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.delay import WORKLOADS, Workload
-from repro.core.topology import ring_topology
 from repro.data.synthetic import FederatedDataset, make_federated_dataset
 from repro.fl import dpasgd
 from repro.models.small import SMALL_MODELS, SmallModelSpec
@@ -89,28 +88,11 @@ def _removed_network(net: NetworkSpec, wl: Workload, k: int,
                      strategy: str, seed: int) -> tuple[NetworkSpec, np.ndarray]:
     """Drop k silos from the network (Table 4 ablation). Returns the
 
-    reduced NetworkSpec and the kept silo indices."""
-    n = net.num_silos
-    if strategy == "random":
-        rng = np.random.default_rng(seed)
-        drop = set(rng.choice(n, size=k, replace=False).tolist())
-    elif strategy == "inefficient":
-        # Remove silos with the longest total delay to ring neighbours.
-        overlay = ring_topology(net, wl).graph
-        from repro.core.delay import graph_pair_delays
-        delays = graph_pair_delays(net, wl, overlay)
-        score = np.zeros(n)
-        for (i, j), d in delays.items():
-            score[i] += d
-            score[j] += d
-        drop = set(np.argsort(-score)[:k].tolist())
-    else:
-        raise ValueError(strategy)
-    keep = np.asarray([i for i in range(n) if i not in drop], np.int64)
-    silos = tuple(net.silos[i] for i in keep)
-    lat = net.latency_ms[np.ix_(keep, keep)]
-    return NetworkSpec(name=f"{net.name}-minus{k}", silos=silos,
-                       latency_ms=lat), keep
+    reduced NetworkSpec and the kept silo indices. Thin wrapper over
+    `repro.faults.degrade.removed_network`, which also supports an
+    explicit drop set for mid-horizon removal."""
+    from repro.faults.degrade import removed_network
+    return removed_network(net, wl, k=k, strategy=strategy, seed=seed)
 
 
 def _sample_round(data, n: int, cfg: FLConfig, rng) -> tuple[np.ndarray,

@@ -1,0 +1,393 @@
+"""Fault-injection layer tests (repro/faults, design/controller, the
+--scenario CLI surfaces):
+
+  * counter-based schedules are pure functions of the round index:
+    any subset of rounds, in any order, across instances — identical
+    bits; the nominal schedule materializes exact-identity arrays;
+  * nominal FaultedSession == plan.cycle_times bit-for-bit, and
+    chunked advances == one big advance;
+  * the vectorized engine == the scalar FaultedDelayTracker oracle
+    (taus AND effective sets) on every scenario x policy;
+  * timeout demotion masks are policy-independent (static and adaptive
+    train identically absent swaps) while the adaptive clock is
+    strictly cheaper on the drift/flash/churn scenarios;
+  * a mid-horizon crash == the planned-isolation oracle: effective
+    masks equal `planned & ~crashed_pair_mask`, and training under
+    them is bit-for-bit identical between the flat whole-cycle runtime
+    and the legacy per-round engine;
+  * CSR edge_aggregate under dynamic masking with empty rows (the
+    degraded-to-isolated path);
+  * the self-healing controller: nominal is bit-exact static-vs-
+    adaptive with zero swaps and ONE compiled trace; churn gives a
+    strict adaptive time-to-target win;
+  * `--scenario` CLI smokes on sweep and search (nominal = today's
+    exact code path, asserted in sweep --check).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import timing
+from repro.core.delay import WORKLOADS, FaultedDelayTracker
+from repro.core.topology import ring_topology
+from repro.faults import (DegradePolicy, FaultedSession, SCENARIOS,
+                          crashed_pair_mask, get_scenario,
+                          pair_rounds_to_directed, removed_network)
+from repro.fl import dpasgd, flat as flatmod, runtime as rtmod
+from repro.networks.zoo import get_network
+from repro.optim import flat_sgd, sgd
+
+KEY = jax.random.PRNGKey(0)
+D = 8
+FEMNIST = WORKLOADS["femnist"]
+
+
+def _toy_init(key):
+    return {"w": jax.random.normal(key, (D,))}
+
+
+def _toy_loss(p, batch):
+    return jnp.sum((p["w"] - batch["t"]) ** 2)
+
+
+@pytest.fixture(scope="module")
+def gaia_plan():
+    net = get_network("gaia")
+    wl = FEMNIST
+    overlay = ring_topology(net, wl).graph
+    plan = timing.multigraph_timing_plan(net, wl, t=5, overlay=overlay)
+    return net, wl, overlay, plan
+
+
+# ---------------------------------------------------------------------------
+# schedules: counter-based determinism
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_schedule_order_independent(name):
+    sched = get_scenario(name).schedule
+    n, r = 11, 64
+    full = sched.arrays(np.arange(r), n)
+    # same rounds, shuffled: rows must be the same bits, any order
+    rng = np.random.default_rng(3)
+    perm = rng.permutation(r)
+    shuf = sched.arrays(perm, n)
+    inv = np.argsort(perm)
+    for a, b in ((full.link_scale, shuf.link_scale[inv]),
+                 (full.comp_scale, shuf.comp_scale[inv]),
+                 (full.crashed, shuf.crashed[inv]),
+                 (full.flapped, shuf.flapped[inv])):
+        np.testing.assert_array_equal(a, b)
+    # arbitrary subset == the matching rows of the full materialization
+    sub = sched.arrays(np.arange(17, 40), n)
+    np.testing.assert_array_equal(sub.link_scale, full.link_scale[17:40])
+    np.testing.assert_array_equal(sub.crashed, full.crashed[17:40])
+    # a fresh instance (new process stand-in) produces identical bits
+    again = type(sched)(name=sched.name, events=sched.events,
+                        seed=sched.seed).arrays(np.arange(r), n)
+    np.testing.assert_array_equal(full.comp_scale, again.comp_scale)
+    np.testing.assert_array_equal(full.flapped, again.flapped)
+
+
+def test_nominal_schedule_is_identity():
+    arr = get_scenario("nominal").schedule.arrays(np.arange(32), 7)
+    assert (arr.link_scale == 1.0).all() and (arr.comp_scale == 1.0).all()
+    assert not arr.crashed.any() and not arr.flapped.any()
+    assert get_scenario("nominal").schedule.is_nominal
+    with pytest.raises(ValueError, match="unknown scenario"):
+        get_scenario("no-such-scenario")
+
+
+# ---------------------------------------------------------------------------
+# engine: nominal identity, chunking, oracle parity
+# ---------------------------------------------------------------------------
+
+
+def test_nominal_engine_bit_exact_and_chunked(gaia_plan):
+    _, _, _, plan = gaia_plan
+    r = 90
+    want = plan.cycle_times(r)
+    one = FaultedSession(plan).advance(r).taus
+    np.testing.assert_array_equal(one, want)
+
+    sess = FaultedSession(plan)
+    chunks = [sess.advance(k).taus for k in (7, 40, 43)]
+    np.testing.assert_array_equal(np.concatenate(chunks), want)
+    assert sess.round == r
+
+
+@pytest.mark.parametrize("adaptive", [False, True])
+@pytest.mark.parametrize(
+    "name", ["nominal", "drift", "diurnal", "flash", "churn", "outage",
+             "flap"])
+def test_engine_matches_scalar_oracle(gaia_plan, name, adaptive):
+    net, wl, overlay, plan = gaia_plan
+    sc = get_scenario(name)
+    r = 100
+    pol = DegradePolicy(timeout_ms=sc.timeout_ms, max_stale=sc.max_stale,
+                        adaptive=adaptive)
+    seg = FaultedSession(plan, schedule=sc.schedule, policy=pol).advance(r)
+    trk = FaultedDelayTracker(net, wl, overlay, timeout_ms=sc.timeout_ms,
+                              max_stale=sc.max_stale, adaptive=adaptive)
+    arr = sc.schedule.arrays(np.arange(r), net.num_silos)
+    pairs = overlay.pairs
+    for k in range(r):
+        planned = {pairs[e] for e in np.nonzero(seg.planned[k])[0]}
+        tau, eff = trk.round_cycle_time(
+            planned, arr.link_scale[k], arr.comp_scale[k],
+            set(np.nonzero(arr.crashed[k])[0].tolist()),
+            set(np.nonzero(arr.flapped[k])[0].tolist()))
+        assert tau == seg.taus[k], (name, adaptive, k)
+        assert eff == {pairs[e] for e in np.nonzero(seg.eff[k])[0]}, \
+            (name, adaptive, k)
+
+
+def test_policy_masks_identical_clock_strictly_cheaper(gaia_plan):
+    """Static and adaptive degrade IDENTICALLY (same training) while the
+    adaptive wall clock is strictly cheaper under the headline
+    scenarios — the mechanism behind the controller's TTA wins."""
+    _, _, _, plan = gaia_plan
+    r = 160
+    for name in ("drift", "flash", "churn"):
+        sc = get_scenario(name)
+        segs = {}
+        for adaptive in (False, True):
+            pol = DegradePolicy(timeout_ms=sc.timeout_ms,
+                                max_stale=sc.max_stale, adaptive=adaptive)
+            segs[adaptive] = FaultedSession(
+                plan, schedule=sc.schedule, policy=pol).advance(r)
+        np.testing.assert_array_equal(segs[False].eff, segs[True].eff)
+        assert (segs[False].planned & ~segs[False].eff).any(), name
+        assert segs[False].taus.sum() > segs[True].taus.sum(), name
+        # the static fleet pays the timeout on more rounds
+        assert (segs[False].paid_timeout.sum()
+                > segs[True].paid_timeout.sum()), name
+
+
+def test_drift_demotes_only_after_ramp_crosses_timeout(gaia_plan):
+    _, _, _, plan = gaia_plan
+    sc = get_scenario("drift")
+    pol = DegradePolicy(timeout_ms=sc.timeout_ms, max_stale=sc.max_stale)
+    seg = FaultedSession(plan, schedule=sc.schedule, policy=pol).advance(60)
+    dem_rounds = np.nonzero((seg.planned & ~seg.eff).any(axis=1))[0]
+    assert dem_rounds.size > 0
+    assert dem_rounds[0] > sc.schedule.events[0].start  # mid-ramp, not t=0
+    # pre-ramp rounds are bit-exact nominal (below the SLA)
+    np.testing.assert_array_equal(
+        seg.taus[:sc.schedule.events[0].start],
+        plan.cycle_times(60)[:sc.schedule.events[0].start])
+
+
+# ---------------------------------------------------------------------------
+# crash == planned isolation (flat AND legacy, bit-for-bit)
+# ---------------------------------------------------------------------------
+
+
+def test_crash_equals_planned_isolation_params(gaia_plan):
+    net, wl, _, tplan = gaia_plan
+    r = 24
+    sc = get_scenario("outage")   # silos (0,1) down for rounds [12, 36)
+    pol = DegradePolicy(timeout_ms=sc.timeout_ms, max_stale=sc.max_stale)
+    seg = FaultedSession(tplan, schedule=sc.schedule, policy=pol).advance(r)
+
+    # 1) the engine's effective masks ARE the planned-isolation oracle
+    arr = sc.schedule.arrays(np.arange(r), net.num_silos)
+    dead = crashed_pair_mask(tplan.pair_i, tplan.pair_j,
+                             arr.crashed | arr.flapped)
+    planned = tplan.strong[seg.phases]
+    np.testing.assert_array_equal(seg.eff, planned & ~dead)
+
+    # 2) training under those masks: flat whole-cycle == legacy rounds,
+    # bit-for-bit in fp32 (the crashed silos degrade to isolated nodes
+    # mid-horizon; nobody stalls, nobody reads a poisoned buffer)
+    plan, _, _ = dpasgd.multigraph_plan(net, wl, tplan=tplan)
+    # RoundPlan's directed edges are the pair list interleaved — the
+    # planned pair masks must round-trip through it exactly
+    np.testing.assert_array_equal(
+        np.repeat(planned, 2, axis=1), plan.strong[seg.phases % len(plan.strong)])
+    eff_legacy = np.repeat(seg.eff, 2, axis=1)          # legacy edge order
+    n = net.num_silos
+    rng = np.random.default_rng(5)
+    batches_all = np.asarray(rng.normal(size=(r, 1, n, 1, D)), np.float32)
+    phases = seg.phases
+
+    lstate = dpasgd.init_fl_state(_toy_init, sgd(0.05), n, plan.src, KEY)
+    step = jax.jit(lambda st, b, s, c, d: dpasgd.fl_round_step(
+        st, b, plan.src, plan.dst, s, c, d, loss_fn=_toy_loss,
+        opt=sgd(0.05), local_updates=1))
+    losses_l = []
+    for k in range(r):
+        lstate, loss = step(lstate, {"t": jnp.asarray(batches_all[k])},
+                            jnp.asarray(eff_legacy[k]),
+                            jnp.asarray(plan.coeffs[phases[k]]),
+                            jnp.asarray(plan.diag[phases[k]]))
+        losses_l.append(float(loss))
+
+    rt = rtmod.make_flat_runtime(plan, jax.eval_shape(_toy_init, KEY), n)
+    fstate = rtmod.init_flat_state(_toy_init, flat_sgd(0.05), rt, KEY)
+    cycle = rtmod.make_cycle_fn(rt, loss_fn=_toy_loss, opt=flat_sgd(0.05))
+    fstate, losses_f = cycle(fstate, {"t": jnp.asarray(batches_all)},
+                             jnp.asarray(rt.expand_pair_mask(seg.eff)),
+                             jnp.asarray(rt.coeffs[phases]),
+                             jnp.asarray(rt.diag[phases]))
+
+    wl_ = np.asarray(flatmod.ravel_stacked(rt.spec, lstate.silo_params))
+    np.testing.assert_array_equal(wl_, np.asarray(fstate.w))
+    assert losses_l == [float(x) for x in np.asarray(losses_f)]
+
+
+def test_expand_pair_mask_matches_helper(gaia_plan):
+    net, wl, _, tplan = gaia_plan
+    plan, _, _ = dpasgd.multigraph_plan(net, wl, tplan=tplan)
+    rt = rtmod.make_flat_runtime(plan, jax.eval_shape(_toy_init, KEY),
+                                 net.num_silos)
+    rng = np.random.default_rng(7)
+    pm = rng.random((5, len(tplan.pair_i))) < 0.5
+    np.testing.assert_array_equal(rt.expand_pair_mask(pm),
+                                  pair_rounds_to_directed(rt.order, pm))
+    np.testing.assert_array_equal(rt.expand_pair_mask(pm[0]),
+                                  pair_rounds_to_directed(rt.order, pm[0]))
+
+
+def test_edge_aggregate_empty_rows_dynamic_mask():
+    """CSR aggregation with a zero-in-degree destination AND a round
+    where dynamic masking leaves another destination fully stale — the
+    degraded-to-isolated path the fault layer exercises every time a
+    silo crashes."""
+    from repro.kernels.gossip_combine.ops import csr_sort, edge_aggregate
+    from repro.kernels.gossip_combine.ref import edge_aggregate_ref
+
+    rng = np.random.default_rng(11)
+    n, d = 6, 5
+    # destination 3 has NO incoming edges at all (empty CSR row);
+    # destination 1's edges exist but are all masked stale this round
+    src = np.asarray([1, 2, 4, 5, 0, 0, 2], np.int64)
+    dst = np.asarray([0, 0, 1, 1, 2, 4, 5], np.int32)
+    order, row_ptr = csr_sort(dst, n)
+    w = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    stale = jnp.asarray(rng.normal(size=(len(src), d)), jnp.float32)
+    fresh_mask = np.ones(len(src), bool)
+    fresh_mask[dst == 1] = False                 # dynamic demotion
+    buf = jnp.where(jnp.asarray(fresh_mask[order])[:, None],
+                    w[src[order]], stale[np.asarray(order)])
+    coeffs = jnp.asarray(rng.random(len(src)), jnp.float32)
+    diag = jnp.asarray(rng.random(n), jnp.float32)
+    out = edge_aggregate(w, buf, coeffs[np.asarray(order)],
+                         jnp.asarray(row_ptr), diag, interpret=True)
+    ref = edge_aggregate_ref(w, buf, coeffs[np.asarray(order)],
+                             jnp.asarray(dst[order]), diag)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+    # the empty row reduces to diag * w exactly
+    np.testing.assert_allclose(np.asarray(out[3]),
+                               float(diag[3]) * np.asarray(w[3]),
+                               rtol=1e-7)
+
+
+# ---------------------------------------------------------------------------
+# removed_network / trainer delegation
+# ---------------------------------------------------------------------------
+
+
+def test_removed_network_explicit_drop():
+    net = get_network("gaia")
+    sub, kept = removed_network(net, drop={0, 3})
+    keep = [i for i in range(net.num_silos) if i not in (0, 3)]
+    np.testing.assert_array_equal(kept, keep)
+    assert sub.num_silos == net.num_silos - 2
+    assert tuple(s.name for s in sub.silos) == \
+        tuple(net.silos[i].name for i in keep)
+    np.testing.assert_array_equal(sub.latency_ms,
+                                  net.latency_ms[np.ix_(keep, keep)])
+    with pytest.raises(ValueError, match="out of range"):
+        removed_network(net, drop={99})
+
+
+def test_removed_network_matches_trainer_strategies():
+    from repro.fl.trainer import _removed_network
+
+    net = get_network("gaia")
+    wl = FEMNIST
+    for strategy in ("random", "inefficient"):
+        a, ka = removed_network(net, wl, k=3, strategy=strategy, seed=4)
+        b, kb = _removed_network(net, wl, 3, strategy, 4)
+        np.testing.assert_array_equal(ka, kb)
+        assert tuple(s.name for s in a.silos) == \
+            tuple(s.name for s in b.silos)
+        np.testing.assert_array_equal(a.latency_ms, b.latency_ms)
+
+
+# ---------------------------------------------------------------------------
+# controller: nominal identity, zero recompiles, churn win
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tiny_harness():
+    from repro.design.controller import ControllerConfig, ControllerHarness
+
+    return ControllerHarness(ControllerConfig(
+        rounds=24, replan_every=12, samples_per_silo=16, batch_size=4))
+
+
+def test_controller_nominal_bit_exact_zero_swaps(tiny_harness):
+    st = tiny_harness.run("nominal", adaptive=False)
+    ad = tiny_harness.run("nominal", adaptive=True)
+    np.testing.assert_array_equal(st.losses, ad.losses)
+    np.testing.assert_array_equal(st.cycle_times_ms, ad.cycle_times_ms)
+    assert ad.swap_rounds == ()
+    assert ad.vectors == (tiny_harness.vec0,)
+    np.testing.assert_array_equal(
+        st.cycle_times_ms, tiny_harness.tplan0.cycle_times(24))
+
+
+def test_controller_churn_strict_tta_win(tiny_harness):
+    from repro.design.evaluate import smoothed_losses
+
+    st = tiny_harness.run("churn", adaptive=False)
+    ad = tiny_harness.run("churn", adaptive=True)
+    # the worse of the two smoothed minima: provably reached by both
+    target = float(max(smoothed_losses(st.losses).min(),
+                       smoothed_losses(ad.losses).min()) * (1 + 1e-9))
+    assert ad.tta_s(target) < st.tta_s(target)
+    assert ad.total_time_s < st.total_time_s
+
+
+def test_controller_single_trace(tiny_harness):
+    # runs after the nominal + churn tests above: however many runs and
+    # swaps went through the harness, the jitted cycle traced ONCE
+    tiny_harness.assert_single_trace()
+
+
+# ---------------------------------------------------------------------------
+# CLI smokes
+# ---------------------------------------------------------------------------
+
+
+def test_sweep_scenario_check_and_run(capsys):
+    from repro.core import sweep
+
+    base = ["--networks", "gaia", "--workloads", "femnist",
+            "--topologies", "multigraph", "--t", "5", "--rounds", "300"]
+    # --check asserts the nominal fault-scenario identity per cell
+    sweep.main(base + ["--check", "--scenario", "churn"])
+    capsys.readouterr()
+    sweep.main(base + ["--scenario", "drift"])
+    out = capsys.readouterr().out
+    assert "faulted timing" in out and "drift" in out
+
+
+def test_search_scenario_cli(capsys):
+    from repro.design import search
+
+    base = ["--networks", "gaia", "--workloads", "femnist",
+            "--rounds", "200", "--max-iters", "2"]
+    assert search.main(base + ["--scenario", "drift"]) == 0
+    out = capsys.readouterr().out
+    assert "matched or beat" in out
+    # unknown scenario fails loudly, nominal is the default path
+    with pytest.raises(ValueError, match="unknown scenario"):
+        search.main(base + ["--scenario", "bogus"])
