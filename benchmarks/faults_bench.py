@@ -16,8 +16,9 @@ least as good as static, and strictly better on the headline trio
 
 Rows merge into BENCH_sim.json under the ``faults/`` prefix (the
 `sim_bench._OWN_PREFIXES` protocol: each bench replaces only its own
-rows). The full matrix additionally lands in ``faults_matrix.json``
-for the CI artifact.
+rows). The full matrix additionally lands under
+``benchmarks/artifacts/`` (gitignored — generated output is a CI
+artifact, not repo state) for upload.
 """
 
 from __future__ import annotations
@@ -29,7 +30,7 @@ import time
 import numpy as np
 
 BENCH_PATH = pathlib.Path("BENCH_sim.json")
-MATRIX_PATH = pathlib.Path("faults_matrix.json")
+MATRIX_PATH = pathlib.Path("benchmarks/artifacts/faults_matrix.json")
 ROW_PREFIX = "faults/"
 
 #: Scenarios where adaptive must STRICTLY beat static on TTA.
@@ -106,6 +107,7 @@ def run(quick: bool = False, out_json: pathlib.Path | str = MATRIX_PATH):
 
     _merge_json(rows)
     out = pathlib.Path(out_json)
+    out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text(json.dumps(
         dict(network=cfg.network, workload=cfg.workload,
              rounds=cfg.rounds, replan_every=cfg.replan_every,

@@ -1,0 +1,141 @@
+"""Population-search benchmark: device grid throughput + engine gates.
+
+Two row families, merged into BENCH_sim.json under this bench's own
+prefixes (the `sim_bench._OWN_PREFIXES` protocol):
+
+* ``design/grid_jax`` — candidate-scoring throughput (candidates/s) of
+  the device grid engine (`core/timing_jax.py`) vs the host grid on a
+  RANDOM population of multiplicity vectors. Random candidates are the
+  regime population search lives in: long transients and rarely-locking
+  orbits defeat the host engine's exact orbit short-circuit, so the
+  device scan's advantage is largest exactly where the search needs it.
+  Scores are asserted bit-identical between backends before any ratio
+  is recorded (acceptance target: >= 10x on the paper horizon).
+
+* ``design/population_search`` — one `search.population_search` run per
+  network, recording paper / hill / population-best mean cycle times
+  and asserting the containment chain ``best <= hill <= paper`` that
+  the engine guarantees by replaying the hill-climb trajectory into
+  its pool.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core.delay import WORKLOADS
+from repro.core.topology import ring_topology
+from repro.design import search
+from repro.networks.zoo import get_network
+
+BENCH_PATH = pathlib.Path("BENCH_sim.json")
+_OWN_PREFIXES = ("design/grid_jax", "design/population_search")
+
+NUM_ROUNDS = 6400   # the paper's training length
+THROUGHPUT_TARGET = 10.0
+
+
+def _grid_row(net_name, wl_name, num_rounds, num_cands, t_max, rng):
+    """Score one random population on both backends, min-of-3 each."""
+    net = get_network(net_name)
+    wl = WORKLOADS[wl_name]
+    overlay = ring_topology(net, wl).graph
+    cands = [tuple(int(x) for x in rng.integers(1, t_max + 1,
+                                                len(overlay.pairs)))
+             for _ in range(num_cands)]
+
+    times = {}
+    scores = {}
+    for backend in ("jax", "numpy"):
+        score_fn = search.make_scorer(net, wl, overlay, rounds=num_rounds,
+                                      backend=backend)
+        best = np.inf
+        for _ in range(3):
+            t0 = time.perf_counter()
+            scores[backend] = score_fn(cands)
+            best = min(best, time.perf_counter() - t0)
+        times[backend] = best
+
+    exact = bool(np.array_equal(scores["jax"], scores["numpy"]))
+    assert exact, f"jax scores != numpy scores on {net_name}/{wl_name}"
+    jax_rate = num_cands / times["jax"]
+    np_rate = num_cands / times["numpy"]
+    speedup = jax_rate / np_rate
+    verdict = (f"pass={speedup >= THROUGHPUT_TARGET}"
+               if num_rounds == NUM_ROUNDS else "pass=n/a(quick)")
+    return ((f"design/grid_jax_{num_rounds}r/{net_name}/{wl_name}/"
+             f"{num_cands}cand"),
+            times["jax"] * 1e6,
+            f"jax_cand_per_s={jax_rate:.0f} numpy_cand_per_s={np_rate:.0f} "
+            f"speedup={speedup:.1f}x exact_match={exact} "
+            f"target>={THROUGHPUT_TARGET:.0f}x@{NUM_ROUNDS}r {verdict}"),
+
+
+def _search_row(net_name, wl_name, num_rounds, max_iters, pop_size,
+                generations):
+    net = get_network(net_name)
+    wl = WORKLOADS[wl_name]
+    t0 = time.perf_counter()
+    res, pool = search.population_search(
+        net, wl, rounds=num_rounds, max_iters=max_iters,
+        pop_size=pop_size, generations=generations, backend="jax")
+    wall = time.perf_counter() - t0
+    assert res.best_mean_ms <= res.hill_best_ms <= res.paper_mean_ms, (
+        f"containment broken on {net_name}: best={res.best_mean_ms} "
+        f"hill={res.hill_best_ms} paper={res.paper_mean_ms}")
+    return ((f"design/population_search_{num_rounds}r/{net_name}/"
+             f"{wl_name}"),
+            wall * 1e6,
+            f"paper_ms={res.paper_mean_ms:.2f} "
+            f"hill_ms={res.hill_best_ms:.2f} "
+            f"best_ms={res.best_mean_ms:.2f} "
+            f"improv_pct={res.improvement_pct:.2f} "
+            f"pool={len(pool)} evals={res.evaluations} "
+            f"eval_per_s={res.evaluations / wall:.0f} "
+            f"beats_hill={res.best_mean_ms <= res.hill_best_ms}"),
+
+
+def run(quick: bool = False, t_max: int = 5):
+    if quick:
+        networks = ["gaia", "geant"]
+        num_rounds, num_cands = 800, 64
+        max_iters, pop_size, generations = 6, 12, 4
+    else:
+        networks = ["gaia", "amazon", "geant", "exodus", "ebone"]
+        num_rounds, num_cands = NUM_ROUNDS, 256
+        max_iters, pop_size, generations = 50, 24, 12
+
+    rng = np.random.default_rng(0)
+    rows = []
+    # Throughput on the smallest and largest overlays brackets the
+    # population regime; every network would retime the same engines.
+    for net_name in (networks[0], networks[-1]):
+        rows.extend(_grid_row(net_name, "femnist", num_rounds, num_cands,
+                              t_max, rng))
+    for net_name in networks:
+        rows.extend(_search_row(net_name, "femnist", num_rounds,
+                                max_iters, pop_size, generations))
+    _merge_json(rows)
+    return rows
+
+
+def _merge_json(rows):
+    """Replace this bench's rows inside BENCH_sim.json, keep the rest."""
+    existing = []
+    if BENCH_PATH.exists():
+        existing = [r for r in json.loads(BENCH_PATH.read_text())
+                    if not str(r.get("name", "")).startswith(_OWN_PREFIXES)]
+    existing += [{"name": n, "us_per_call": round(us, 1), "derived": d}
+                 for n, us, d in rows]
+    BENCH_PATH.write_text(json.dumps(existing, indent=1))
+
+
+if __name__ == "__main__":
+    import sys
+
+    for name, us, derived in run(quick="--quick" in sys.argv):
+        print(f"{name},{us:.1f},{derived}")

@@ -50,8 +50,9 @@ def main() -> None:
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (ablation_noniid, faults_bench, fig5_convergence,
-                            kernel_bench, sim_bench, table1_cycle_time,
-                            table3_isolated, table4_removal, table5_accuracy,
+                            kernel_bench, population_bench, sim_bench,
+                            table1_cycle_time, table3_isolated,
+                            table4_removal, table5_accuracy,
                             table6_tradeoff, tta_bench)
 
     suites = {
@@ -75,8 +76,12 @@ def main() -> None:
         # into BENCH_sim.json without clobbering sim_bench's):
         "tta": lambda: tta_bench.run(quick=args.quick),
         # fault-injection scenario matrix, static vs adaptive TTA
-        # (merges faults/ rows; writes faults_matrix.json):
+        # (merges faults/ rows; writes the matrix artifact under
+        # benchmarks/artifacts/):
         "faults": lambda: faults_bench.run(quick=args.quick),
+        # device-grid candidate throughput + population-engine gates
+        # (merges design/grid_jax and design/population_search rows):
+        "population": lambda: population_bench.run(quick=args.quick),
         "roofline": _roofline_rows,
         # beyond-paper ablation; opt-in (adds ~10 min):
         #   python -m benchmarks.run --only noniid

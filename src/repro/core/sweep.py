@@ -59,6 +59,11 @@ class SweepConfig:
     num_rounds: int = 6400
     seed: int = 0
     scenario: str = "nominal"   # named FaultSchedule (repro.faults)
+    backend: str = "numpy"      # recurrence grid engine: "numpy" (host,
+    #                             orbit short-circuit — right for few
+    #                             long-horizon cells) or "jax" (device
+    #                             scan, core/timing_jax.py); bit-exact
+    #                             either way, asserted by --check
 
 
 @dataclasses.dataclass(frozen=True)
@@ -175,7 +180,7 @@ def run_sweep(cfg: SweepConfig, batched: bool = True,
     if batched:
         grid = timing.build_timing_grid(plans)
         t0 = time.perf_counter()
-        reports = grid.reports(cfg.num_rounds)
+        reports = grid.reports(cfg.num_rounds, backend=cfg.backend)
         grid_ms = (time.perf_counter() - t0) * 1e3
         # The recurrence cells advance as ONE array program; their
         # shared wall-clock is attributed equally across them.
@@ -376,6 +381,9 @@ def consistency_check(cfg: SweepConfig) -> None:
       MATCHA sampler) == legacy per-cell construction;
     * batched `TimingGrid` evaluation — with AND without per-cell
       retirement — == per-cell evaluation;
+    * the DEVICE grid engine (``backend="jax"``, `core/timing_jax.py`)
+      == the host grid == per-cell, full `CycleTimeReport` equality
+      (mean/total/state statistics), not just cycle times;
     * MATCHA trainer total == report total past the old 512-round
       tiled period;
     * the nominal fault scenario is the identity: every cell's
@@ -389,8 +397,9 @@ def consistency_check(cfg: SweepConfig) -> None:
     grid = timing.build_timing_grid(plans)
     batched = grid.reports(cfg.num_rounds)
     no_retire = grid.reports(cfg.num_rounds, retire=False)
+    device = grid.reports(cfg.num_rounds, backend="jax")
     oracle = [p.report(cfg.num_rounds) for p in legacy]
-    for b, nr, o in zip(batched, no_retire, oracle):
+    for b, nr, dv, o in zip(batched, no_retire, device, oracle):
         if b != o:
             raise AssertionError(
                 f"shared/batched != per-cell on {o.topology}/{o.network}/"
@@ -399,6 +408,10 @@ def consistency_check(cfg: SweepConfig) -> None:
             raise AssertionError(
                 f"non-retiring grid != per-cell on {o.topology}/"
                 f"{o.network}/{o.workload}: {nr} vs {o}")
+        if dv != o:
+            raise AssertionError(
+                f"jax grid != per-cell on {o.topology}/"
+                f"{o.network}/{o.workload}: {dv} vs {o}")
     if any(t.startswith("matcha") for t in cfg.topologies):
         from repro.core.simulator import simulate
         from repro.fl import dpasgd
@@ -426,6 +439,7 @@ def consistency_check(cfg: SweepConfig) -> None:
                 f"{p.network}/{p.workload}")
     print(f"consistency_check OK: {len(batched)} cells bit-exact "
           f"(shared construction, batched grid, retirement on+off, "
+          f"jax==numpy==per-cell reports, "
           f"nominal fault scenario identity), "
           f"matcha trainer==report@{max(520, cfg.num_rounds)}r")
 
@@ -441,6 +455,11 @@ def main(argv: list[str] | None = None) -> None:
     ap.add_argument("--t", default="5",
                     help="comma-separated multigraph t values")
     ap.add_argument("--rounds", type=int, default=6400)
+    ap.add_argument("--backend", choices=("numpy", "jax"),
+                    default="numpy",
+                    help="recurrence grid engine for the batched "
+                         "evaluation; outputs are bit-identical "
+                         "(asserted by --check)")
     ap.add_argument("--quick", action="store_true",
                     help="CI-sized subset (gaia+geant, femnist)")
     ap.add_argument("--check", action="store_true",
@@ -468,7 +487,8 @@ def main(argv: list[str] | None = None) -> None:
         networks=tuple(s for s in args.networks.split(",") if s),
         workloads=tuple(s for s in args.workloads.split(",") if s),
         t_values=tuple(int(s) for s in args.t.split(",") if s),
-        num_rounds=args.rounds, scenario=args.scenario)
+        num_rounds=args.rounds, scenario=args.scenario,
+        backend=args.backend)
     if args.quick:
         cfg = dataclasses.replace(
             cfg, networks=("gaia", "geant"), workloads=("femnist",))

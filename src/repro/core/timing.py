@@ -870,15 +870,35 @@ class TimingGrid:
     def num_cells(self) -> int:
         return len(self.plans)
 
-    def cycle_time_matrix(self, num_rounds: int,
-                          retire: bool = True) -> np.ndarray:
+    def _rec_taus(self, num_rounds: int, retire: bool,
+                  backend: str) -> np.ndarray:
+        """(len(rec_rows), num_rounds) recurrence taus on ``backend``.
+
+        ``"numpy"`` is the host engine with exact-verified orbit
+        short-circuiting (the oracle); ``"jax"`` runs the device scan
+        (`core/timing_jax.py`) — bit-for-bit identical output, no
+        orbit detection (``retire`` is moot there: a locked cell's
+        continued stepping IS the tiled replay, so full-horizon
+        stepping produces the same bits by construction).
+        """
+        if backend == "jax":
+            from repro.core import timing_jax
+            return timing_jax.grid_recurrence_taus(
+                self.d0, self.pair_comp, self.strong, self.trans,
+                self.lone_comp, self.num_states, num_rounds)
+        if backend != "numpy":
+            raise ValueError(f"unknown timing backend {backend!r} "
+                             "(expected 'numpy' or 'jax')")
+        return _grid_recurrence_taus(
+            self.d0, self.pair_comp, self.strong, self.trans,
+            self.lone_comp, self.num_states, num_rounds, retire=retire)
+
+    def cycle_time_matrix(self, num_rounds: int, retire: bool = True,
+                          backend: str = "numpy") -> np.ndarray:
         """(num_cells, num_rounds) f64 ms — every cell's tau series."""
         out = np.empty((len(self.plans), num_rounds), np.float64)
         if self.rec_rows:
-            rec = _grid_recurrence_taus(
-                self.d0, self.pair_comp, self.strong, self.trans,
-                self.lone_comp, self.num_states, num_rounds,
-                retire=retire)
+            rec = self._rec_taus(num_rounds, retire, backend)
             for row, c in enumerate(self.rec_rows):
                 out[c] = rec[row]
         for c, plan in enumerate(self.plans):
@@ -886,13 +906,11 @@ class TimingGrid:
                 out[c] = plan.cycle_times(num_rounds)
         return out
 
-    def reports(self, num_rounds: int,
-                retire: bool = True) -> list[CycleTimeReport]:
+    def reports(self, num_rounds: int, retire: bool = True,
+                backend: str = "numpy") -> list[CycleTimeReport]:
         """One CycleTimeReport per plan, recurrence rows batched."""
-        rec_taus = (_grid_recurrence_taus(
-            self.d0, self.pair_comp, self.strong, self.trans,
-            self.lone_comp, self.num_states, num_rounds, retire=retire)
-            if self.rec_rows else None)
+        rec_taus = (self._rec_taus(num_rounds, retire, backend)
+                    if self.rec_rows else None)
         row_of = {c: row for row, c in enumerate(self.rec_rows)}
         out = []
         for c, plan in enumerate(self.plans):

@@ -51,6 +51,7 @@ from repro.networks.zoo import NetworkSpec
 __all__ = [
     "christofides_tours", "min_weight_matchings", "DesignContext",
     "SweepConstructor", "batched_sampled_cycle_times",
+    "CandidateBatch", "CandidateScorer", "stack_multiplicity_candidates",
 ]
 
 
@@ -341,6 +342,199 @@ class DesignContext:
             return self._sampled[key]
 
         return run
+
+
+# ---------------------------------------------------------------------------
+# batched candidate scoring (population search's evaluation engine)
+# ---------------------------------------------------------------------------
+
+
+def _capped_rows(mults: np.ndarray, cap_states: int | None) -> np.ndarray:
+    """Row-wise `parsing.capped_multiplicities`: the largest uniform
+    clamp per candidate with ``lcm(min(m, clamp)) <= cap_states``.
+    Identical semantics to the dict path (property-tested); kept as a
+    small host loop because the clamp rarely iterates at paper t."""
+    if cap_states is None:
+        return mults.copy()
+    if cap_states < 1:
+        raise ValueError(f"cap_states must be >= 1, got {cap_states}")
+    out = mults.copy()
+    for row in out:
+        if not row.size:
+            continue
+        m_max = int(row.max())
+        while m_max > 1 and \
+                int(np.lcm.reduce(np.minimum(row, m_max))) > cap_states:
+            m_max -= 1
+        np.minimum(row, m_max, out=row)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class CandidateBatch:
+    """Stacked Eq. 4 arrays for C multiplicity vectors over ONE overlay.
+
+    Same padding contract as `timing.build_timing_grid` (phantom states
+    carry strong=False / trans=T_SS / lone=-inf and are never indexed,
+    since each cell's phase is ``k % num_states[c]``), so the arrays
+    feed either grid engine directly. Bit-for-bit equal to stacking the
+    per-candidate `timing.multiplicity_vector_plan` arrays — asserted
+    by tests/test_population.py.
+    """
+
+    capped: np.ndarray      # (C, E) int64 capped multiplicities
+    num_states: np.ndarray  # (C,) int64 per-candidate schedule length
+    strong: np.ndarray      # (C, S_max, E) bool
+    trans: np.ndarray       # (C, S_max, E) int8 transition codes
+    lone_comp: np.ndarray   # (C, S_max) f64
+
+
+def stack_multiplicity_candidates(overlay: SimpleGraph, comp: np.ndarray,
+                                  cands, *,
+                                  cap_states: int | None = timing.CAP_STATES
+                                  ) -> CandidateBatch:
+    """Vectorized construction of a whole candidate population.
+
+    The per-candidate constructor builds each plan's arrays one at a
+    time (Algorithm 2 closed form, ~1 ms each — which dominates
+    population scoring at thousands of candidates per generation).
+    Here the closed form broadcasts over the candidate axis instead:
+    ``strong[c, m, e] = (m % capped[c, e] == 0)`` and the previous
+    state's mask is the same formula at ``m - 1`` (Python modulo makes
+    the m=0 wraparound exact: ``(-1) % L == L - 1``, zero iff L == 1 —
+    exactly `np.roll`'s state ``S_c - 1``, since S_c = lcm is 0 mod L).
+    """
+    pairs = overlay.pairs
+    num_pairs = len(pairs)
+    if not num_pairs:
+        raise ValueError("cannot stack candidates over a zero-pair overlay")
+    comp = np.asarray(comp, np.float64)
+    mm = np.array([tuple(int(m) for m in c) for c in cands], np.int64)
+    mm = mm.reshape(len(mm), num_pairs)
+    if (mm < 1).any():
+        raise ValueError("multiplicities must be >= 1")
+    capped = _capped_rows(mm, cap_states)
+    num_states = np.lcm.reduce(capped, axis=1)
+    num_cells = len(capped)
+    s_max = int(num_states.max()) if num_cells else 1
+    m = np.arange(s_max, dtype=np.int64)
+    strong = (m[None, :, None] % capped[:, None, :]) == 0
+    prev = ((m - 1)[None, :, None] % capped[:, None, :]) == 0
+    trans = (2 * prev.astype(np.int8) + strong.astype(np.int8))
+
+    pi = np.fromiter((p[0] for p in pairs), np.int64, num_pairs)
+    pj = np.fromiter((p[1] for p in pairs), np.int64, num_pairs)
+    n = comp.shape[0]
+    incidence = np.zeros((num_pairs, n), np.float64)
+    incidence[np.arange(num_pairs), pi] = 1.0
+    incidence[np.arange(num_pairs), pj] = 1.0
+    lone = np.empty((num_cells, s_max), np.float64)
+    # (C, S, N) intermediates are chunked over candidates (ebone at
+    # C=1024 would be ~2.5 GB otherwise); per-chunk ops replay the
+    # per-plan constructor's exact sequence (0/1 matmul counts are
+    # integer-exact, so the > 0 mask and masked max match bitwise).
+    step = max(1, 32_000_000 // max(s_max * max(n, 1) * 8, 1))
+    for lo in range(0, num_cells, step):
+        in_strong = (strong[lo:lo + step].astype(np.float64)
+                     @ incidence) > 0
+        lone[lo:lo + step] = np.max(
+            np.where(in_strong, -np.inf, comp[None, None, :]), axis=2)
+
+    # Apply the grid padding contract to states past each cell's own
+    # schedule (the modulo formulas above tile the schedule instead).
+    valid = m[None, :] < num_states[:, None]
+    strong &= valid[:, :, None]
+    trans = np.where(valid[:, :, None], trans,
+                     np.int8(timing.T_SS))
+    lone = np.where(valid, lone, -np.inf)
+    return CandidateBatch(capped=capped, num_states=num_states,
+                          strong=strong, trans=trans, lone_comp=lone)
+
+
+class CandidateScorer:
+    """Mean-cycle-time scorer for multiplicity vectors over one overlay
+    — the population engine's evaluation core.
+
+    Construction artifacts that are shared by every candidate (Eq. 3
+    pair delays ``d0``, per-pair compute, with optional observed-delay
+    overrides) are computed once; each `score` call stacks its
+    candidate set with `stack_multiplicity_candidates` and evaluates
+    all of them in ONE grid program. ``backend="jax"`` keeps the shared
+    ``(E,)`` buffers resident on device across calls (generations of a
+    population search re-use them without re-upload) and runs the
+    `core/timing_jax.py` scan; ``backend="numpy"`` feeds the identical
+    stacked arrays to `timing._grid_recurrence_taus` — the bit-exact
+    oracle (and the right choice for few cells / short horizons, where
+    device dispatch overhead dominates).
+
+    Scores are bit-for-bit equal to `search.score_candidates` (the
+    per-plan construction + grid path) on either backend — asserted by
+    tests/test_population.py.
+    """
+
+    def __init__(self, net: NetworkSpec, wl: Workload,
+                 overlay: SimpleGraph, *, rounds: int,
+                 cap_states: int | None = timing.CAP_STATES,
+                 d0_override: np.ndarray | None = None,
+                 comp_override: np.ndarray | None = None,
+                 backend: str = "jax"):
+        if backend not in ("jax", "numpy"):
+            raise ValueError(f"unknown scorer backend {backend!r}")
+        pairs = overlay.pairs
+        num_pairs = len(pairs)
+        if not num_pairs:
+            raise ValueError("scorer needs an overlay with >= 1 pair")
+        self.net, self.wl, self.overlay = net, wl, overlay
+        self.rounds = int(rounds)
+        self.cap_states = cap_states
+        self.backend = backend
+        pi = np.fromiter((p[0] for p in pairs), np.int64, num_pairs)
+        pj = np.fromiter((p[1] for p in pairs), np.int64, num_pairs)
+        comp = (wl.compute_ms(net).astype(np.float64)
+                if comp_override is None
+                else np.asarray(comp_override, np.float64))
+        if comp.shape != (net.num_silos,):
+            raise ValueError(f"comp_override shape {comp.shape} != "
+                             f"({net.num_silos},)")
+        d0 = (timing.pair_delay_vector(net, wl, pi, pj, overlay.degrees())
+              if d0_override is None
+              else np.asarray(d0_override, np.float64))
+        if d0.shape != (num_pairs,):
+            raise ValueError(f"d0_override shape {d0.shape} != "
+                             f"({num_pairs},)")
+        self.comp = comp
+        self.d0 = d0
+        self.pair_comp = np.maximum(comp[pi], comp[pj])
+        self._dev = None   # lazily uploaded shared (E,) device buffers
+
+    def score(self, cands) -> np.ndarray:
+        """(len(cands),) f64 mean cycle time (ms) over the horizon."""
+        cands = list(cands)
+        if not cands:
+            return np.zeros(0, np.float64)
+        batch = stack_multiplicity_candidates(
+            self.overlay, self.comp, cands, cap_states=self.cap_states)
+        if self.backend == "jax":
+            from repro.core import timing_jax
+            if self._dev is None:
+                import jax
+                import jax.numpy as jnp
+                with jax.experimental.enable_x64():
+                    self._dev = (jnp.asarray(self.d0, jnp.float64),
+                                 jnp.asarray(self.pair_comp, jnp.float64))
+            taus = timing_jax.grid_recurrence_taus(
+                self._dev[0], self._dev[1], batch.strong, batch.trans,
+                batch.lone_comp, batch.num_states, self.rounds)
+        else:
+            num_pairs = len(self.d0)
+            taus = timing._grid_recurrence_taus(
+                np.broadcast_to(self.d0, (len(cands), num_pairs)),
+                np.broadcast_to(self.pair_comp, (len(cands), num_pairs)),
+                batch.strong, batch.trans, batch.lone_comp,
+                batch.num_states, self.rounds)
+        # Per-row float(mean) — the same reduction `CycleTimeReport`
+        # applies, so scorer output == `search.score_candidates` bits.
+        return np.array([float(t.mean()) for t in taus])
 
 
 class SweepConstructor:

@@ -32,8 +32,8 @@ from repro.core import timing
 from repro.core.delay import WORKLOADS
 from repro.core.topology import ring_topology
 from repro.design import evaluate as eval_mod
-from repro.design.search import (_neighbors, score_candidates,
-                                 strong_fraction)
+from repro.design.search import (evolve_population, hill_climb,
+                                 make_scorer, strong_fraction)
 from repro.faults import (DegradePolicy, FaultedSession, Scenario,
                           get_scenario)
 
@@ -62,6 +62,15 @@ class ControllerConfig:
     seed: int = 0
     replan_threshold: float = 0.05  # max relative pair-delay deviation
     replan_iters: int = 4           # hill-climb steps per re-plan
+    # Re-planning runs the same population engine as the offline search
+    # (design/search.py): hill-climb replay seeds the pool, then a few
+    # annealed mutate/swap/crossover generations widen it. Segments are
+    # short and candidate counts small, so the host grid is the right
+    # scorer by default; "jax" flips the per-segment search onto the
+    # device engine.
+    replan_generations: int = 2
+    replan_pop: int = 8
+    replan_backend: str = "numpy"
 
     def __post_init__(self):
         if self.rounds % self.replan_every:
@@ -188,11 +197,17 @@ class ControllerHarness:
                        horizon: int) -> tuple[int, ...]:
         """Best multiplicity vector for the OBSERVED delay window.
 
-        Seeds: the current vector and Algorithm 1 recomputed from the
-        observed delays; then a short +-1 hill climb scored by the
-        batched grid under ``d0_override``/``comp_override``, holding
-        the usual density floor so the controller can never starve
-        communication to cheat the clock.
+        The online twin of `search.population_search`, sized for a
+        segment boundary: the current vector and Algorithm 1 recomputed
+        from the observed delays seed a short hill climb
+        (``replan_iters``), the scored pool becomes a small population,
+        and ``replan_generations`` annealed mutate/swap/crossover
+        generations widen it — all scored by one `make_scorer` under
+        ``d0_override``/``comp_override``, holding the usual density
+        floor so the controller can never starve communication to
+        cheat the clock. The pool argmin keeps the hill climb's
+        matches-or-beats containment: evolution can only improve on
+        the seeds.
         """
         cfg = self.cfg
         seeds = [vec]
@@ -201,23 +216,28 @@ class ControllerHarness:
             seeds.append(alg1)
         seeds = [s for s in seeds
                  if strong_fraction(s) >= self.density_floor] or [vec]
-        scores = score_candidates(self.net, self.wl, self.overlay, seeds,
-                                  horizon, d0_override=est,
-                                  comp_override=comp_est)
-        best_i = int(np.argmin(scores))
-        best, best_ms = seeds[best_i], float(scores[best_i])
-        for _ in range(cfg.replan_iters):
-            nbrs = [v for v in _neighbors(best, cfg.t_max)
-                    if strong_fraction(v) >= self.density_floor]
-            if not nbrs:
-                break
-            scores = score_candidates(self.net, self.wl, self.overlay,
-                                      nbrs, horizon, d0_override=est,
-                                      comp_override=comp_est)
-            i = int(np.argmin(scores))
-            if float(scores[i]) >= best_ms:
-                break
-            best, best_ms = nbrs[i], float(scores[i])
+        score_fn = make_scorer(self.net, self.wl, self.overlay,
+                               rounds=horizon, d0_override=est,
+                               comp_override=comp_est,
+                               backend=cfg.replan_backend)
+        pool: dict[tuple[int, ...], float] = {}
+        best, best_ms, _, _ = hill_climb(score_fn, seeds,
+                                         t_max=cfg.t_max,
+                                         floor=self.density_floor,
+                                         max_iters=cfg.replan_iters,
+                                         pool=pool)
+        if cfg.replan_generations > 0 and cfg.replan_pop > 1:
+            ranked = sorted((ms, v) for v, ms in pool.items())
+            population = [v for _, v in ranked[:cfg.replan_pop]]
+            # Seeded per re-plan (segment horizons differ), so the
+            # whole scenario matrix stays deterministic.
+            rng = np.random.default_rng([cfg.seed, horizon])
+            evolve_population(score_fn, pool, population,
+                              t_max=cfg.t_max, floor=self.density_floor,
+                              rng=rng,
+                              generations=cfg.replan_generations,
+                              temp0=max(best_ms, 1e-9) * 0.05)
+            best_ms, best = min((ms, v) for v, ms in pool.items())
         return best
 
     def _runtime_for(self, vec: tuple[int, ...]):

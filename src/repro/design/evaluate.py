@@ -85,6 +85,11 @@ class TTAResult:
     mean_cycle_ms: float
     total_time_s: float     # simulated wall clock of the whole run
     train_s: float          # host seconds spent actually training
+    # Mean strong-pair density of the trained vector (mean(1/m_e)) —
+    # with the diverse frontier (design/search.py) each candidate sits
+    # at a distinct density, and this field is what makes the trade-off
+    # readable straight off the result rows.
+    density: float = 0.0
 
     def row(self) -> dict:
         d = dataclasses.asdict(self)
@@ -167,8 +172,8 @@ def evaluate_frontier(network: str, workload: str, named_vectors, *,
 
     out: list[TTAResult] = []
     target: float | None = None
-    for (name, _), (_, tplan), rt in zip(named_vectors, schedules,
-                                         runtimes):
+    for (name, vec), (_, tplan), rt in zip(named_vectors, schedules,
+                                           runtimes):
         t0 = time.perf_counter()
         rng = np.random.default_rng(seed + 1)
         per_round = [_sample_round(data, n, cfg, rng)
@@ -196,7 +201,8 @@ def evaluate_frontier(network: str, workload: str, named_vectors, *,
             target_loss=target, reached_round=k, tta_s=tta_s,
             final_loss=final_loss, final_acc=acc,
             mean_cycle_ms=rep.mean_cycle_ms,
-            total_time_s=rep.total_time_s, train_s=train_s))
+            total_time_s=rep.total_time_s, train_s=train_s,
+            density=float(np.mean(1.0 / np.asarray(vec, np.float64)))))
     # The whole point of this function: identical shapes across
     # candidates mean the cycle traced exactly once, no matter how many
     # designs trained. K re-traces would be K ~25 s compiles — past the
@@ -250,4 +256,7 @@ def evaluate_design(network: str, workload: str, *,
                      reached_round=k, tta_s=tta_s, final_loss=final_loss,
                      final_acc=res.final_acc(),
                      mean_cycle_ms=res.mean_cycle_ms,
-                     total_time_s=res.total_time_s, train_s=train_s)
+                     total_time_s=res.total_time_s, train_s=train_s,
+                     density=(0.0 if multiplicity is None else float(
+                         np.mean(1.0 / np.asarray(multiplicity,
+                                                  np.float64)))))
