@@ -81,7 +81,8 @@ def run(quick: bool = False):
                  f"saving={naive / fused:.2f}x"))
 
     rows.extend(_edge_aggregate_rows(quick=quick))
-    _write_json(rows)
+    rows.extend(_mesh_cycle_rows(quick=quick))
+    _merge_json(rows)
     return rows
 
 
@@ -173,7 +174,75 @@ def _edge_aggregate_rows(quick: bool = False):
     return rows
 
 
-def _write_json(rows, path: str = "BENCH_kernels.json") -> None:
-    payload = [{"name": name, "us_per_call": round(us, 1), "derived": der}
-               for name, us, der in rows]
-    pathlib.Path(path).write_text(json.dumps(payload, indent=2) + "\n")
+def _mesh_cycle_rows(quick: bool = False):
+    """Sharded vs single-device whole-cycle scaling (fl/mesh.py).
+
+    Each shard count needs its own XLA device count, which is fixed at
+    backend init — so every (network, D) point runs in a CHILD process
+    with XLA_FLAGS=--xla_force_host_platform_device_count=D
+    (benchmarks/mesh_cycle_child.py). The child parity-asserts the
+    sharded cycle against the single-device oracle before timing; a row
+    with parity=False is a correctness failure, not a slow result.
+
+    On this container the 8 "devices" are threads of nproc physical
+    cores, so whole-cycle time does NOT drop with D — the run is
+    CPU-bound and the derived field records cpu_cores for the roofline
+    explanation (DESIGN.md §16): on real hardware the shard-local terms
+    (local SGD + segment_sum over per-shard rows) divide by D while
+    only the halo bytes stay on the wire.
+    """
+    import os
+    import subprocess
+    import sys
+
+    child = pathlib.Path(__file__).parent / "mesh_cycle_child.py"
+    src = pathlib.Path(__file__).parent.parent / "src"
+    points = ([("gaia", d) for d in (1, 2)] if quick else
+              [(net, d) for net in ("gaia", "wan64")
+               for d in (1, 2, 4, 8)])
+    cores = os.cpu_count()
+    rows, base_us = [], {}
+    for net, d in points:
+        # JAX_PLATFORMS=cpu: the child must not probe accelerator
+        # plugins — this bench process already holds the device (libtpu
+        # serializes on a lockfile and the child would sleep forever).
+        env = {"PYTHONPATH": str(src), "PATH": "/usr/bin:/bin",
+               "JAX_PLATFORMS": "cpu",
+               "XLA_FLAGS": f"--xla_force_host_platform_device_count={d}"}
+        r = subprocess.run(
+            [sys.executable, str(child), net, str(d), "2"],
+            capture_output=True, text=True, timeout=1500, env=env)
+        if r.returncode != 0:
+            rows.append((f"kernel/fl_mesh_cycle/{net}_d{d}", 0.0,
+                         f"FAILED: {r.stderr[-200:]}"))
+            continue
+        out = json.loads(r.stdout.strip().splitlines()[-1])
+        base_us.setdefault(net, out["us_per_cycle"])
+        speedup = base_us[net] / max(out["us_per_cycle"], 1e-9)
+        rows.append((
+            f"kernel/fl_mesh_cycle/{net}_d{d}", out["us_per_cycle"],
+            f"N={out['num_silos']} T={out['t']} "
+            f"rounds={out['rounds_per_cycle']} parity={out['parity']} "
+            f"halo_rows={out['halo_rows']} speedup_vs_d1={speedup:.2f}x "
+            f"cpu_cores={cores} (host devices share {cores} core(s): "
+            f"CPU-bound, see DESIGN.md §16 roofline)"))
+    return rows
+
+
+def _merge_json(rows, path: str = "BENCH_kernels.json") -> None:
+    """Own-prefix merge: replace the `kernel/<bench>/` prefixes this run
+
+    produced, keep every other row (so a partial re-run — e.g. only the
+    mesh scaling sweep — refreshes its own rows without clobbering the
+    rest of the file)."""
+    prefixes = tuple({"/".join(name.split("/")[:2]) + "/"
+                      for name, _, _ in rows})
+    p = pathlib.Path(path)
+    existing = []
+    if p.exists():
+        existing = [r for r in json.loads(p.read_text())
+                    if not str(r.get("name", "")).startswith(prefixes)]
+    payload = existing + [
+        {"name": name, "us_per_call": round(us, 1), "derived": der}
+        for name, us, der in rows]
+    p.write_text(json.dumps(payload, indent=2) + "\n")

@@ -1,0 +1,86 @@
+"""Child process for kernel_bench's fl_mesh_cycle rows.
+
+Launched once per (network, shard count) with
+XLA_FLAGS=--xla_force_host_platform_device_count=<D> in the
+environment (device count is fixed at backend init, so each D needs its
+own process). Parity-asserts one sharded cycle against the
+single-device oracle, times the sharded whole-cycle dispatch, and
+prints one JSON line on stdout.
+
+    python benchmarks/mesh_cycle_child.py <network> <num_shards> [iters]
+"""
+
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.delay import FEMNIST
+from repro.fl import dpasgd, mesh as flmesh, runtime as rtmod
+from repro.networks.zoo import get_network
+from repro.optim import flat_sgd
+
+D_IN, D_H = 256, 252  # MLP: T = 256*252 + 252 ~= 64.8k
+
+
+def _init(key):
+    return {"w": jax.random.normal(key, (D_IN, D_H)) * 0.05,
+            "b": jnp.zeros((D_H,))}
+
+
+def _loss(p, batch):
+    return jnp.mean((batch["x"] @ p["w"] + p["b"]) ** 2)
+
+
+def main():
+    net_name, d = sys.argv[1], int(sys.argv[2])
+    iters = int(sys.argv[3]) if len(sys.argv) > 3 else 3
+    assert jax.device_count() >= d, (jax.device_count(), d)
+
+    net = get_network(net_name)
+    n = net.num_silos
+    plan, _, _ = dpasgd.multigraph_plan(net, FEMNIST, t=5)
+    r = plan.num_rounds_cycle
+    key = jax.random.PRNGKey(0)
+    opt = flat_sgd(0.05, momentum=0.9)
+    rt = rtmod.make_flat_runtime(plan, jax.eval_shape(_init, key), n)
+    rng = np.random.default_rng(0)
+    batches = {"x": jnp.asarray(rng.normal(size=(r, 1, n, 2, D_IN)),
+                                jnp.float32)}
+    args = (batches, jnp.asarray(rt.strong), jnp.asarray(rt.coeffs),
+            jnp.asarray(rt.diag))
+
+    mrt = flmesh.make_mesh_runtime(rt, d)
+    state = flmesh.init_mesh_state(_init, opt, mrt, key)
+    cycle = rtmod.make_cycle_fn(mrt, loss_fn=_loss, opt=opt)
+
+    # parity vs the single-device oracle, full cycle, before timing
+    s1 = rtmod.init_flat_state(_init, opt, rt, key)
+    c1 = rtmod.make_cycle_fn(rt, loss_fn=_loss, opt=opt)
+    s1, _ = c1(s1, *args)
+    sm, _ = cycle(state, *args)
+    flat = flmesh.gather_flat_state(mrt, sm)
+    parity = (np.array_equal(np.asarray(s1.w), np.asarray(flat.w))
+              and np.array_equal(np.asarray(s1.buffers),
+                                 np.asarray(flat.buffers)))
+
+    jax.block_until_ready(sm)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        sm, losses = cycle(sm, *args)
+    jax.block_until_ready(sm)
+    us = (time.perf_counter() - t0) / iters * 1e6
+
+    print(json.dumps({
+        "net": net_name, "num_silos": n, "d": d, "t": rt.spec.size,
+        "rounds_per_cycle": r, "us_per_cycle": round(us, 1),
+        "parity": bool(parity), "halo_rows": mrt.halo.halo_rows,
+        "trace_count": cycle.trace_count["count"],
+    }))
+
+
+if __name__ == "__main__":
+    main()

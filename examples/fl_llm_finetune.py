@@ -4,6 +4,14 @@ architecture across silos with the multigraph topology, and compare the
 simulated wall-clock against RING — the paper's technique applied to a
 modern model stack.
 
+The training itself runs on the MESH-SHARDED flat runtime (DESIGN.md
+§16): silos are sharded over a `silo`-axis device mesh, each round's
+cross-silo exchange is a halo ppermute, and per-silo trainable state is
+a LoRA delta over a frozen shared base (fl/lora.py) — the layout the
+roofline prices for the full-size configs (`fl_mesh_report`). On a
+1-device host the mesh degenerates to one shard; set
+XLA_FLAGS=--xla_force_host_platform_device_count=8 to see real shards.
+
     PYTHONPATH=src python examples/fl_llm_finetune.py [--arch qwen2-7b]
 """
 
@@ -17,12 +25,14 @@ def main():
     ap.add_argument("--arch", default="mamba2-370m")
     ap.add_argument("--rounds", type=int, default=60)
     ap.add_argument("--silos", type=int, default=5)
+    ap.add_argument("--lora-rank", type=int, default=4)
     args = ap.parse_args()
 
     results = {}
     for topo in ("multigraph", "ring"):
         cfg = TrainConfig(arch=args.arch, topology=topo, silos=args.silos,
-                          rounds=args.rounds, lr=5e-2)
+                          rounds=args.rounds, lr=5e-2, mesh="auto",
+                          lora_rank=args.lora_rank)
         results[topo] = run_reduced_fl(cfg)
         r = results[topo]
         print(f"{topo:11s} loss {r['loss_first']:.3f} -> {r['loss_last']:.3f}"

@@ -71,6 +71,13 @@ class ControllerConfig:
     replan_generations: int = 2
     replan_pop: int = 8
     replan_backend: str = "numpy"
+    # Shard the flat runtime over a silo-axis device mesh (DESIGN.md
+    # §16): None = single device; an int / "auto" / a prebuilt Mesh as
+    # in FLConfig.mesh. The live-swap contract is unchanged — swapped
+    # schedules are still just new runtime arguments to ONE traced
+    # cycle, now a shard_map program.
+    mesh: object = None
+    gossip: str = "halo"
 
     def __post_init__(self):
         if self.rounds % self.replan_every:
@@ -160,9 +167,24 @@ class ControllerHarness:
         self._flrt = flrt
         self._template = template
         self.rt0 = flrt.make_flat_runtime(plan0, template, n)
-        self._cycle_fn = flrt.make_cycle_fn(
-            self.rt0, loss_fn=lambda p, b: self._spec.loss(p, b),
-            opt=self._opt)
+        if cfg.mesh is not None:
+            from repro.fl import mesh as flmesh
+            self.rt0 = flmesh.make_mesh_runtime(
+                self.rt0, None if cfg.mesh == "auto" else cfg.mesh)
+            self._cycle_fn = flrt.make_cycle_fn(
+                self.rt0, loss_fn=lambda p, b: self._spec.loss(p, b),
+                opt=self._opt, gossip=cfg.gossip)
+            self._init_state = lambda: flmesh.init_mesh_state(
+                self._spec.init, self._opt, self.rt0, self._key)
+            self._get_w = lambda st: jnp.asarray(
+                np.asarray(jax.device_get(st.w))[:n])
+        else:
+            self._cycle_fn = flrt.make_cycle_fn(
+                self.rt0, loss_fn=lambda p, b: self._spec.loss(p, b),
+                opt=self._opt)
+            self._init_state = lambda: flrt.init_flat_state(
+                self._spec.init, self._opt, self.rt0, self._key)
+            self._get_w = lambda st: st.w
         self.density_floor = (cfg.density_slack
                               * strong_fraction(self.vec0) - 1e-12)
 
@@ -281,8 +303,7 @@ class ControllerHarness:
         session = FaultedSession(tplan, schedule=sc.schedule, policy=policy)
         assumed = tplan.d0.copy()
 
-        state = self._flrt.init_flat_state(self._spec.init, self._opt,
-                                           self.rt0, self._key)
+        state = self._init_state()
         re = cfg.replan_every
         num_segments = cfg.rounds // re
         losses: list[float] = []
@@ -320,7 +341,7 @@ class ControllerHarness:
                         session.swap_plan(tplan)
                         swaps.append(session.round)
                         vectors.append(vec)
-        acc = float(self._acc_fn(state.w))
+        acc = float(self._acc_fn(self._get_w(state)))
         return ControlledRun(
             scenario=sc.schedule.name, adaptive=adaptive,
             losses=np.asarray(losses), cycle_times_ms=np.concatenate(taus),

@@ -1,8 +1,13 @@
 from repro.fl.dpasgd import FLSimState, make_round_schedule, RoundPlan
+from repro.fl.lora import LoRAAdapter, make_lora_adapter
+from repro.fl.mesh import (MeshRuntime, gather_flat_state, init_mesh_state,
+                           make_mesh_runtime)
 from repro.fl.runtime import (FlatFLState, FlatRuntime, init_flat_state,
                               make_cycle_fn, make_flat_runtime)
 from repro.fl.trainer import FLConfig, run_fl
 
 __all__ = ["FLSimState", "RoundPlan", "make_round_schedule", "FLConfig",
            "run_fl", "FlatFLState", "FlatRuntime", "make_flat_runtime",
-           "init_flat_state", "make_cycle_fn"]
+           "init_flat_state", "make_cycle_fn", "MeshRuntime",
+           "make_mesh_runtime", "init_mesh_state", "gather_flat_state",
+           "LoRAAdapter", "make_lora_adapter"]

@@ -142,3 +142,46 @@ def unravel_stacked(spec: FlatSpec, flat: jax.Array) -> Params:
             jax.lax.dynamic_slice_in_dim(flat, off, cnt, axis=1)
             .reshape((n,) + shape).astype(dt))
     return jax.tree.unflatten(spec.treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# mesh-aware layout (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshFlatSpec:
+    """FlatSpec + how its buffers shard over a silo-axis device mesh.
+
+    The (N, T) param/opt matrix is row-sharded in contiguous blocks
+    (shard p owns silo rows [p*per, (p+1)*per), N padded up to
+    `rows_padded` = D*per) and the (2E, T) edge-buffer matrix is
+    DST-sharded: each shard owns the block of dst-sorted edge rows its
+    silos aggregate into, padded to `edges_padded` = D*e_per. Both pads
+    sit at the end of each shard's block so shard_map sees equal-sized
+    blocks; pad rows are inert by construction (fl/mesh.py).
+    """
+
+    spec: FlatSpec
+    axis: str
+    num_shards: int
+    rows_padded: int      # Np = D * per
+    edges_padded: int     # E_pad = D * e_per
+
+    def partition_of(self, shape: tuple[int, ...]):
+        """PartitionSpec for one state leaf: silo-sharded iff its
+        leading axis is the padded row/edge axis, replicated otherwise
+        (e.g. the optimizer's step scalar)."""
+        from repro.launch.sharding import fl_leaf_spec
+        return fl_leaf_spec(shape, self.rows_padded, self.edges_padded,
+                            axis=self.axis)
+
+    def sharding_of(self, mesh, shape: tuple[int, ...]):
+        return jax.sharding.NamedSharding(mesh, self.partition_of(shape))
+
+    def shard_tree(self, mesh, tree: Params) -> Params:
+        """device_put every leaf with its NamedSharding — this is what
+        pins the (N, T)/(2E, T) buffers onto the mesh."""
+        return jax.tree.map(
+            lambda x: jax.device_put(x, self.sharding_of(mesh, x.shape)),
+            tree)

@@ -24,25 +24,26 @@ Two lowerings (DESIGN.md §5):
 Both run inside shard_map with a named silo axis. Weak-edge staleness is
 carried by `buffers` (a pytree holding the last-received left/right
 neighbour models), mirroring dpasgd.py's simulation-mode semantics.
+
+The mesh-sharded flat runtime (fl/mesh.py, DESIGN.md §16) generalizes
+these two lowerings from the ring overlay to ANY CSR edge structure:
+`csr_gather_all` is the all_gather backend and `csr_gather_halo` the
+ppermute backend — both fetch, for one shard, the (e_per, T) source
+rows of its block of dst-sorted edges; everything downstream of the
+fetch (buffer refresh + `edge_aggregate`) is shard-local and identical.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Any
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
 
+from repro.launch.mesh import axis_size as _axis_size  # shared compat shim
+
 Params = Any
-
-
-def _axis_size(axis: str) -> int:
-    """Static mesh-axis size inside shard_map, across jax versions."""
-    if hasattr(jax.lax, "axis_size"):
-        return jax.lax.axis_size(axis)
-    import jax.core as _core  # 0.4.x: the frame IS the size
-    return int(_core.axis_frame(axis))
 
 
 def gossip_dense(params: Params, a_matrix: jax.Array, axis: str) -> Params:
@@ -146,3 +147,56 @@ def init_ring_buffers(params: Params) -> dict:
     """Stale buffers start as the silo's own weights (identical init)."""
     return {"left": jax.tree.map(jnp.copy, params),
             "right": jax.tree.map(jnp.copy, params)}
+
+
+# ---------------------------------------------------------------------------
+# CSR cross-shard edge-source gather (the mesh runtime's collectives)
+# ---------------------------------------------------------------------------
+#
+# Both backends run inside shard_map on a 1-D silo-axis mesh where shard
+# p holds rows [p*per, (p+1)*per) of the global (Np, T) param matrix and
+# the contiguous block of dst-sorted edges whose destinations it owns.
+# They return the (e_per, T) matrix of SOURCE rows for this shard's
+# edges; per-shard index tables arrive pre-sliced (the caller passes the
+# (D, ·) table through shard_map with a silo-axis in_spec, so each body
+# sees only its own (1, ·) row).
+
+
+def csr_gather_all(w: jax.Array, src_global: jax.Array,
+                   axis: str) -> jax.Array:
+    """all_gather backend: materialize the full (Np, T) matrix, then a
+    static row gather. Moves Np*T elements per shard regardless of how
+    many edges actually cross shard boundaries — the baseline.
+
+    w (per, T) this shard's rows; src_global (e_per,) GLOBAL src row of
+    each of this shard's edges (pad edges may point anywhere valid).
+    """
+    w_all = jax.lax.all_gather(w, axis, axis=0, tiled=True)  # (Np, T)
+    return w_all[src_global]
+
+
+def csr_gather_halo(w: jax.Array, send_idx: Sequence[jax.Array],
+                    perms: Sequence[Sequence[tuple[int, int]]],
+                    gather_idx: jax.Array, axis: str) -> jax.Array:
+    """ppermute halo backend: move ONLY the rows that cross a shard
+    boundary. One ppermute per active shard-offset o: every shard sends
+    its send_idx[o] rows to shard (p+o) % D simultaneously, then the
+    needed rows are picked from the virtual concat
+
+        [ my rows (per) | halo from offset o1 | halo from offset o2 | … ]
+
+    via a per-shard static `gather_idx` derived once from the CSR
+    structure at plan-build time (fl/mesh.py). States whose strong edges
+    stay within shards move strictly fewer bytes — the multigraph's
+    cycle-time win appears structurally in the lowered HLO, exactly as
+    `gossip_ring_ppermute` did for the ring special case.
+
+    send_idx[k] (H_k,) LOCAL rows this shard contributes to offset k's
+    exchange; perms[k] the offset's (src, dst) shard pairs; gather_idx
+    (e_per,) index into the virtual concat for each of my edges.
+    """
+    parts = [w]
+    for idx_k, perm_k in zip(send_idx, perms):
+        parts.append(jax.lax.ppermute(w[idx_k], axis, perm_k))
+    stacked = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
+    return stacked[gather_idx]

@@ -1,0 +1,152 @@
+"""LoRA-style low-rank per-silo deltas over a shared replicated base.
+
+The mesh-sharded flat runtime (fl/mesh.py) holds per-silo trainable
+state as `(N, T)` rows plus `(2E, T)` edge buffers. For the multi-
+billion-parameter `configs/` architectures that layout is intractable:
+with T = 27e9 even ONE silo row exceeds device HBM, and every directed
+edge buffers a full copy. This module shrinks T to a LoRA footprint:
+
+  * every matrix-shaped leaf (ndim >= 2) of the model pytree trains a
+    low-rank delta  A @ B  with  A (.., d1, r), B (.., r, d2)  — leading
+    batch/stack dims (e.g. a scanned layer axis) are preserved;
+  * vector/scalar leaves (norm scales, biases) train DENSE deltas —
+    they are tiny and low-rank would be degenerate;
+  * the BASE pytree is frozen and shared: under `shard_map` it is a
+    closed-over constant, replicated once per device, NOT per silo.
+
+`B` initialises to zero, so every silo starts at exactly the base model
+(delta = 0) — the FL analogue of standard LoRA init — and the DPASGD
+aggregation stays well-posed: mixing deltas row-wise is mixing
+`base + A@B` because the base term is common to every silo.
+
+Usage with the flat/mesh runtime:
+
+    ad    = make_lora_adapter(base_params, rank=8)
+    rt    = make_flat_runtime(plan, jax.eval_shape(ad.init, key), n)
+    state = init_mesh_state(ad.init, opt, mrt, key)
+    cycle = make_cycle_fn(mrt, loss_fn=ad.wrap_loss(loss_fn), opt=opt)
+
+so T becomes `lora_size(template, rank)` and the runtime is unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+
+# Leaf-delta containers: a dict {"A": .., "B": ..} marks a low-rank
+# delta; a bare array marks a dense delta. Both are plain pytrees, so
+# the flat runtime ravels them without knowing about LoRA at all.
+
+
+def _is_lowrank(shape: tuple[int, ...], rank: int) -> bool:
+    """Low-rank only pays when r(d1+d2) < d1*d2; degenerate dims opt out."""
+    if len(shape) < 2:
+        return False
+    d1, d2 = shape[-2], shape[-1]
+    return rank * (d1 + d2) < d1 * d2
+
+
+def delta_template(template: Params, rank: int) -> Params:
+    """Shape pytree of the trainable delta for `template` params."""
+
+    def leaf(l):
+        shape = tuple(l.shape)
+        if _is_lowrank(shape, rank):
+            lead = shape[:-2]
+            return {"A": jax.ShapeDtypeStruct(lead + (shape[-2], rank),
+                                              jnp.float32),
+                    "B": jax.ShapeDtypeStruct(lead + (rank, shape[-1]),
+                                              jnp.float32)}
+        return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+    return jax.tree.map(leaf, template)
+
+
+def lora_size(template: Params, rank: int) -> int:
+    """T_lora: flat trainable floats per silo (vs full T = sum sizes)."""
+    total = 0
+    for l in jax.tree.leaves(template):
+        shape = tuple(l.shape)
+        if _is_lowrank(shape, rank):
+            lead = int(np.prod(shape[:-2])) if shape[:-2] else 1
+            total += lead * rank * (shape[-2] + shape[-1])
+        else:
+            total += int(np.prod(shape)) if shape else 1
+    return total
+
+
+def init_delta(template: Params, rank: int, key: jax.Array) -> Params:
+    """delta_0: A ~ N(0, 1/sqrt(d1)) fan-in scaled, B = 0, dense = 0.
+
+    A@B = 0 everywhere, so apply(base, delta_0) == base bit-for-bit.
+    """
+    leaves = jax.tree.leaves(template)
+    keys = jax.random.split(key, max(len(leaves), 1))
+    flat_keys = iter(keys)
+
+    def leaf(l):
+        k = next(flat_keys)
+        shape = tuple(l.shape)
+        if _is_lowrank(shape, rank):
+            lead = shape[:-2]
+            a = jax.random.normal(k, lead + (shape[-2], rank),
+                                  jnp.float32) / np.sqrt(shape[-2])
+            return {"A": a, "B": jnp.zeros(lead + (rank, shape[-1]),
+                                           jnp.float32)}
+        return jnp.zeros(shape, jnp.float32)
+
+    return jax.tree.map(leaf, template)
+
+
+def apply_delta(base: Params, delta: Params) -> Params:
+    """Materialise effective params: base + A@B (or base + dense delta)."""
+
+    def leaf(b, d):
+        if isinstance(d, dict):
+            return (jnp.asarray(b)
+                    + (d["A"] @ d["B"]).astype(b.dtype))
+        return jnp.asarray(b) + jnp.asarray(d).astype(b.dtype)
+
+    # tree.map flattens `delta` UP TO base's structure, so each {"A","B"}
+    # dict arrives whole at its base leaf
+    return jax.tree.map(leaf, base, delta)
+
+
+@dataclasses.dataclass(frozen=True)
+class LoRAAdapter:
+    """Bundle the flat runtime needs: init / apply / loss wrapper."""
+
+    base: Params
+    rank: int
+    init: Callable[[jax.Array], Params]
+    apply: Callable[[Params], Params]
+
+    def wrap_loss(self, loss_fn):
+        """loss over deltas: loss_fn(base + A@B, batch).
+
+        `self.base` is closed over — under jit/shard_map it is a
+        compile-time constant replicated per DEVICE (not per silo row),
+        which is the whole memory model.
+        """
+        base = self.base
+
+        def delta_loss(delta, batch):
+            return loss_fn(apply_delta(base, delta), batch)
+
+        return delta_loss
+
+
+def make_lora_adapter(base: Params, rank: int) -> LoRAAdapter:
+    template = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(tuple(l.shape), l.dtype), base)
+    return LoRAAdapter(
+        base=base, rank=rank,
+        init=lambda key: init_delta(template, rank, key),
+        apply=lambda delta: apply_delta(base, delta))

@@ -120,7 +120,8 @@ def init_flat_state(init_params: Callable[[jax.Array], Params], opt,
 
 def make_cycle_fn(rt: FlatRuntime, *, loss_fn, opt, lr_scale=1.0,
                   aggregator: str | None = None,
-                  donate: bool | None = None):
+                  donate: bool | None = None,
+                  gossip: str | None = None):
     """Build the once-compiled whole-cycle step.
 
     Returns `cycle(state, batches, strong, coeffs, diag) ->
@@ -130,6 +131,10 @@ def make_cycle_fn(rt: FlatRuntime, *, loss_fn, opt, lr_scale=1.0,
     specializes per R and the attached `cycle.trace_count["count"]`
     records how often tracing actually ran (the whole point: once).
 
+    Passing a `fl/mesh.py` MeshRuntime instead builds the SHARDED twin
+    of this function (same external contract, shard_map program inside;
+    `gossip` picks its cross-shard backend, default "halo").
+
     aggregator: "kernel" (Pallas `edge_aggregate`, interpret-mode off
     TPU), "reference" (`segment_sum` twin — bit-for-bit equal to the
     legacy per-leaf lowering), or "dense" (uniform-in-degree overlays
@@ -138,6 +143,18 @@ def make_cycle_fn(rt: FlatRuntime, *, loss_fn, opt, lr_scale=1.0,
     accumulation order up to FMA fusion). Default: kernel on TPU,
     reference elsewhere.
     """
+    from repro.fl import mesh as flmesh  # lazy: fl.mesh imports this module
+    if isinstance(rt, flmesh.MeshRuntime):
+        if aggregator not in (None, "reference"):
+            raise ValueError("the mesh runtime aggregates per shard via "
+                             f"segment_sum; aggregator={aggregator!r} is "
+                             "single-device only")
+        return flmesh.make_mesh_cycle_fn(
+            rt, loss_fn=loss_fn, opt=opt, lr_scale=lr_scale,
+            gossip_backend=gossip or "halo", donate=donate)
+    if gossip is not None:
+        raise ValueError("gossip= selects the MESH runtime's cross-shard "
+                         "backend; pass a MeshRuntime to use it")
     if aggregator is None:
         aggregator = "kernel" if jax.default_backend() == "tpu" else \
             "reference"

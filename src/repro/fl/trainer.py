@@ -61,6 +61,15 @@ class FLConfig:
     # "flat" = whole-cycle flat-parameter runtime; "legacy" = per-round
     # stacked-pytree steps (kept as the equivalence oracle).
     runtime: str = "flat"
+    # Flat runtime only: shard silos over a device mesh with a named
+    # "silo" axis (DESIGN.md §16). None = single device (the oracle);
+    # an int = that many shards; "auto" = every device the host
+    # exposes; or a prebuilt 1-D jax Mesh. Bit-for-bit equal state to
+    # mesh=None, and schedule swaps still never recompile.
+    mesh: object = None
+    # Mesh only: cross-shard source-row collective — "halo" (ppermute
+    # exchange of boundary-crossing rows) or "all_gather" (baseline).
+    gossip: str = "halo"
     # Multigraph only: explicit multiplicity vector aligned with the
     # Christofides overlay pairs (the design search's exchange format);
     # None = Algorithm 1's assignment at `t`.
@@ -144,8 +153,21 @@ def run_fl(cfg: FLConfig) -> FLResult:
         opt = flat_sgd(cfg.lr, momentum=cfg.momentum)
         template = jax.eval_shape(spec.init, key)
         rt = flrt.make_flat_runtime(plan, template, n)
-        state = flrt.init_flat_state(spec.init, opt, rt, key)
-        cycle_fn = flrt.make_cycle_fn(rt, loss_fn=loss_fn, opt=opt)
+        if cfg.mesh is not None:
+            from repro.fl import mesh as flmesh
+            rt = flmesh.make_mesh_runtime(
+                rt, None if cfg.mesh == "auto" else cfg.mesh)
+            state = flmesh.init_mesh_state(spec.init, opt, rt, key)
+            cycle_fn = flrt.make_cycle_fn(rt, loss_fn=loss_fn, opt=opt,
+                                          gossip=cfg.gossip)
+            # eval through the SAME single-device jit as mesh=None:
+            # silo rows are bit-identical, so accuracies are too
+            get_w = lambda st: jnp.asarray(
+                np.asarray(jax.device_get(st.w))[:n])
+        else:
+            state = flrt.init_flat_state(spec.init, opt, rt, key)
+            cycle_fn = flrt.make_cycle_fn(rt, loss_fn=loss_fn, opt=opt)
+            get_w = lambda st: st.w
         eval_params_fn = jax.jit(
             lambda w: flatmod.unravel(rt.spec, jnp.mean(w, axis=0)))
 
@@ -168,10 +190,12 @@ def run_fl(cfg: FLConfig) -> FLResult:
             round_losses.extend(float(x) for x in np.asarray(losses))
             k += chunk
             if k % cfg.eval_every == 0 or k == cfg.rounds:
-                acc = float(acc_fn(eval_params_fn(state.w)))
+                acc = float(acc_fn(eval_params_fn(get_w(state))))
                 eval_rounds.append(k)
                 eval_accs.append(acc)
     elif cfg.runtime == "legacy":
+        if cfg.mesh is not None:
+            raise ValueError("mesh= requires runtime='flat'")
         opt = sgd(cfg.lr, momentum=cfg.momentum)
         state = dpasgd.init_fl_state(spec.init, opt, n, plan.src, key)
         step = jax.jit(lambda st, batches, s, c, d: dpasgd.fl_round_step(

@@ -26,7 +26,6 @@ import pathlib  # noqa: E402
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
-from jax import shard_map  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.configs import get_config  # noqa: E402
@@ -93,12 +92,12 @@ def lower_state(name: str, arch: str, active_left: bool,
     step = build_step(cfg, active_left, active_right)
     podspec = jax.tree.map(lambda s: P("pod"), pspec,
                            is_leaf=lambda x: isinstance(x, P))
-    smapped = shard_map(
-        step, mesh=mesh,
+    from repro.launch.mesh import shard_map_partial_auto
+    smapped = shard_map_partial_auto(  # pod manual; data/model stay auto
+        step, mesh,
         in_specs=(podspec, {"left": podspec, "right": podspec}),
         out_specs=(podspec, {"left": podspec, "right": podspec}),
-        check_vma=False,
-        axis_names=frozenset({"pod"}))  # pod manual; data/model stay auto
+        manual_axes=("pod",))
 
     rep = {"variant": f"D_{name}", "arch": arch,
            "active": [active_left, active_right]}

@@ -217,6 +217,110 @@ def analytic_bytes(cfg: ModelConfig, shape: InputShape) -> float:
 
 
 # ---------------------------------------------------------------------------
+# FL mesh memory / collective model (DESIGN.md §16)
+# ---------------------------------------------------------------------------
+
+FL_HBM_PER_DEVICE = 80e9  # one accelerator per silo shard (80 GB class)
+
+
+def fl_mesh_report(arch: str, *, network: str = "gaia", num_shards: int = 8,
+                   rank: int = 8, t: int = 5,
+                   hbm_per_device: float = FL_HBM_PER_DEVICE) -> dict:
+    """Dry-run the mesh-sharded FL runtime's memory/collective budget.
+
+    Lays the `network`'s multigraph CSR plan over `num_shards` silo
+    shards with the EXACT layout fl/mesh.py builds (block rows,
+    dst-sharded padded edges, halo exchange derived from the CSR), then
+    prices per-device HBM for the two per-silo state models:
+
+      * full:  (N, T_full) rows + (2E, T_full) edge buffers, f32 —
+        w + momentum + the shard's buffer rows;
+      * lora:  frozen base replicated ONCE per device in the model's
+        own dtype, plus (N, T_lora) low-rank deltas (fl/lora.py) and
+        (2E, T_lora) buffers.
+
+    Collective bytes per round compare the all_gather baseline (every
+    shard receives all other shards' rows) against the halo exchange
+    (only boundary-crossing CSR source rows move). No devices are
+    needed: this is the plan-build arithmetic, so it prices the
+    full-size configs on any host.
+    """
+    import jax
+
+    from repro.core.delay import FEMNIST
+    from repro.fl import dpasgd, lora
+    from repro.fl.mesh import _build_halo, block_layout
+    from repro.kernels.gossip_combine.ops import csr_sort
+    from repro.models import transformer as tf
+    from repro.networks.zoo import get_network
+
+    cfg = get_config(arch)
+    template = jax.eval_shape(lambda k: tf.init_params(cfg, k),
+                              jax.ShapeDtypeStruct((2,), np.uint32))
+    t_full = int(sum(int(np.prod(l.shape)) if l.shape else 1
+                     for l in jax.tree.leaves(template)))
+    t_lora = lora.lora_size(template, rank)
+
+    net = get_network(network)
+    n = net.num_silos
+    plan, _, _ = dpasgd.multigraph_plan(net, FEMNIST, t=t)
+    order, _ = csr_sort(plan.dst, n)
+    dst_sorted = plan.dst[order].astype(np.int64)
+    src_sorted = plan.src[order].astype(np.int64)
+
+    d = num_shards
+    per = -(-n // d)
+    counts, _, _, src_global = block_layout(dst_sorted, src_sorted, d, per)
+    e_per = int(src_global.shape[1])
+    halo_rows = _build_halo(counts, src_global, d, per).halo_rows
+
+    base_bytes = t_full * _dtype_bytes(cfg)
+    # persistent per-device state: w + momentum rows, this shard's edge
+    # buffer rows; flat training state is f32 (DESIGN.md §9)
+    full_state = (2 * per + e_per) * t_full * 4
+    lora_state = (2 * per + e_per) * t_lora * 4
+
+    def _coll(t_width: int) -> dict:
+        return {"all_gather": (d - 1) * per * t_width * 4,
+                "halo": halo_rows * t_width * 4}
+
+    full_total = full_state + _coll(t_full)["halo"]
+    lora_total = base_bytes + lora_state + _coll(t_lora)["halo"]
+    return {
+        "arch": arch, "network": network, "num_shards": d, "rank": rank,
+        "num_silos": n, "per_shard_rows": per, "edges_per_shard": e_per,
+        "halo_rows": halo_rows, "t_full": t_full, "t_lora": t_lora,
+        "hbm_per_device": hbm_per_device,
+        "full": {"state_bytes": full_state,
+                 "collective_bytes_per_round": _coll(t_full),
+                 "total_bytes": full_total,
+                 "fits": full_total <= hbm_per_device},
+        "lora": {"base_bytes": base_bytes, "state_bytes": lora_state,
+                 "collective_bytes_per_round": _coll(t_lora),
+                 "total_bytes": lora_total,
+                 "fits": lora_total <= hbm_per_device},
+    }
+
+
+def fl_mesh_table(archs, **kw) -> str:
+    rows = [fl_mesh_report(a, **kw) for a in archs]
+    out = ["| arch | T_full | T_lora | full GB/dev | fits | "
+           "lora GB/dev | fits | halo/AG bytes |",
+           "|" + "---|" * 8]
+    for r in rows:
+        ag = r["lora"]["collective_bytes_per_round"]["all_gather"]
+        halo = r["lora"]["collective_bytes_per_round"]["halo"]
+        out.append(
+            f"| {r['arch']} | {r['t_full']:.3g} | {r['t_lora']:.3g} "
+            f"| {r['full']['total_bytes'] / 1e9:.1f} "
+            f"| {'yes' if r['full']['fits'] else 'NO'} "
+            f"| {r['lora']['total_bytes'] / 1e9:.1f} "
+            f"| {'yes' if r['lora']['fits'] else 'NO'} "
+            f"| {halo / max(ag, 1):.2f}x |")
+    return "\n".join(out)
+
+
+# ---------------------------------------------------------------------------
 # report assembly
 # ---------------------------------------------------------------------------
 

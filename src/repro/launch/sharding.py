@@ -171,6 +171,38 @@ def batch_specs(mode: str, *, multi_pod: bool, fl: bool,
     return out
 
 
+def fl_leaf_spec(shape: tuple[int, ...], rows_padded: int,
+                 edges_padded: int, *, axis: str = "silo") -> P:
+    """Spec for one flat-FL state leaf on the 1-D silo mesh
+    (DESIGN.md §16): the (Np, T) param/opt matrix and the (E_pad, T)
+    edge-buffer matrix are row-sharded on the silo axis (params by
+    owning silo, edges by DESTINATION silo — each shard owns the rows
+    its silos aggregate into); anything else (optimizer step scalar,
+    per-round loss outputs) is replicated.
+    """
+    if len(shape) >= 1 and shape[0] in (rows_padded, edges_padded):
+        return P(axis, *([None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def fl_plan_specs(*, axis: str = "silo") -> dict:
+    """Specs for the mesh cycle's per-round plan slices and batches.
+
+    strong/coeffs (R, E_pad) and diag (R, Np) shard their TRAILING
+    axis — round index replicated, each shard reads only its own edge/
+    row block; batches (R, u, Np, b, ...) shard the silo axis (dim 2).
+    Per-shard static index tables (dst_local, src_global, gather_idx,
+    halo send tables — all (D, ·)) shard their LEADING axis, which is
+    how each shard_map body receives only its own row of the table.
+    """
+    return {
+        "edge_rounds": P(None, axis),        # strong / coeffs (R, E_pad)
+        "diag_rounds": P(None, axis),        # diag (R, Np)
+        "batches": P(None, None, axis),      # (R, u, Np, b...) + trailing None
+        "table": P(axis, None),              # (D, ·) per-shard index tables
+    }
+
+
 def decode_cache_specs(cfg: ModelConfig, state_shape, *, batch: int,
                        multi_pod: bool, mesh=None,
                        kv_seq_shard: bool = False) -> Any:

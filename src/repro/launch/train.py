@@ -60,6 +60,14 @@ class TrainConfig:
     lr: float = 3e-3
     seed: int = 0
     reduced: bool = True
+    # Shard silos over a device mesh (fl/mesh.py): None = legacy
+    # per-round runtime; an int / "auto" / a Mesh runs the whole-cycle
+    # flat runtime sharded on the silo axis (DESIGN.md §16).
+    mesh: object = None
+    # Mesh path only: rank > 0 trains LoRA deltas over a frozen shared
+    # base (fl/lora.py) so per-silo state is T_lora, not T_full.
+    lora_rank: int = 0
+    gossip: str = "halo"
 
 
 def run_reduced_fl(cfg: TrainConfig) -> dict:
@@ -70,11 +78,7 @@ def run_reduced_fl(cfg: TrainConfig) -> dict:
 
     plan, _ = dpasgd.make_round_schedule(cfg.topology, net, wl, t=cfg.t,
                                          rounds=cfg.rounds, seed=cfg.seed)
-    opt = sgd(cfg.lr, momentum=0.9)
     key = jax.random.PRNGKey(cfg.seed)
-    state = dpasgd.init_fl_state(lambda k: tf.init_params(mcfg, k), opt, n,
-                                 plan.src, key)
-
     data = make_lm_dataset(mcfg.vocab_size, cfg.seq_len, n,
                            samples_per_silo=64, seed=cfg.seed)
     prefix = None
@@ -89,32 +93,84 @@ def run_reduced_fl(cfg: TrainConfig) -> dict:
         loss, _ = tf.loss_fn(p, mcfg, b)
         return loss
 
-    step = jax.jit(lambda st, batches, s, c, d: dpasgd.fl_round_step(
-        st, batches, plan.src, plan.dst, s, c, d,
-        loss_fn=loss_fn, opt=opt, local_updates=1))
-
     rng = np.random.default_rng(cfg.seed)
-    losses = []
-    r_cycle = plan.num_rounds_cycle
-    t0 = time.time()
-    for k in range(cfg.rounds):
+
+    def draw_round():
         toks = np.stack([
             data[s][rng.integers(0, len(data[s]), cfg.batch_size)]
             for s in range(n)])  # (N, B, S+1)
-        batches = {"tokens": jnp.asarray(toks[None, :, :, :-1]),
-                   "labels": jnp.asarray(toks[None, :, :, 1:])}
-        if prefix is not None:
-            batches["prefix_embeds"] = prefix
-        pk = k % r_cycle
-        state, loss = step(state, batches,
-                           jnp.asarray(plan.strong[pk]),
-                           jnp.asarray(plan.coeffs[pk]),
-                           jnp.asarray(plan.diag[pk]))
-        losses.append(float(loss))
+        return toks
+
+    losses = []
+    r_cycle = plan.num_rounds_cycle
+    t0 = time.time()
+    if cfg.mesh is not None:
+        # mesh-sharded whole-cycle flat runtime (DESIGN.md §16); with
+        # lora_rank > 0 the trainable per-silo state is the LoRA delta
+        # over a frozen base shared by every silo (fl/lora.py)
+        from repro.fl import lora as loramod
+        from repro.fl import mesh as flmesh
+        from repro.fl import runtime as flrt
+        from repro.optim import flat_sgd
+        init_fn = lambda k: tf.init_params(mcfg, k)
+        cycle_loss = loss_fn
+        if cfg.lora_rank > 0:
+            base = tf.init_params(mcfg, jax.random.PRNGKey(cfg.seed + 1))
+            adapter = loramod.make_lora_adapter(base, cfg.lora_rank)
+            init_fn = adapter.init
+            cycle_loss = adapter.wrap_loss(loss_fn)
+        opt = flat_sgd(cfg.lr, momentum=0.9)
+        rt = flrt.make_flat_runtime(plan, jax.eval_shape(init_fn, key), n)
+        mrt = flmesh.make_mesh_runtime(
+            rt, None if cfg.mesh == "auto" else cfg.mesh)
+        state = flmesh.init_mesh_state(init_fn, opt, mrt, key)
+        cycle = flrt.make_cycle_fn(mrt, loss_fn=cycle_loss, opt=opt,
+                                   gossip=cfg.gossip)
+        k = 0
+        while k < cfg.rounds:
+            chunk = min(r_cycle, cfg.rounds - k)
+            toks = np.stack([draw_round() for _ in range(chunk)])
+            batches = {"tokens": jnp.asarray(toks[:, None, :, :, :-1]),
+                       "labels": jnp.asarray(toks[:, None, :, :, 1:])}
+            if prefix is not None:
+                batches["prefix_embeds"] = jnp.broadcast_to(
+                    prefix[None], (chunk,) + prefix.shape)
+            pks = [(k + j) % r_cycle for j in range(chunk)]
+            state, chunk_losses = cycle(state, batches,
+                                        jnp.asarray(rt.strong[pks]),
+                                        jnp.asarray(rt.coeffs[pks]),
+                                        jnp.asarray(rt.diag[pks]))
+            losses.extend(float(x) for x in np.asarray(chunk_losses))
+            k += chunk
+        # bytes a silo actually communicates per round: the flat row
+        # (the LoRA delta when lora_rank > 0, not the frozen base)
+        param_bytes = rt.spec.size * 4
+    else:
+        if cfg.lora_rank:
+            raise ValueError("lora_rank requires the mesh runtime "
+                             "(set mesh=, e.g. mesh='auto')")
+        opt = sgd(cfg.lr, momentum=0.9)
+        state = dpasgd.init_fl_state(lambda k: tf.init_params(mcfg, k), opt,
+                                     n, plan.src, key)
+        step = jax.jit(lambda st, batches, s, c, d: dpasgd.fl_round_step(
+            st, batches, plan.src, plan.dst, s, c, d,
+            loss_fn=loss_fn, opt=opt, local_updates=1))
+        for k in range(cfg.rounds):
+            toks = draw_round()
+            batches = {"tokens": jnp.asarray(toks[None, :, :, :-1]),
+                       "labels": jnp.asarray(toks[None, :, :, 1:])}
+            if prefix is not None:
+                batches["prefix_embeds"] = prefix
+            pk = k % r_cycle
+            state, loss = step(state, batches,
+                               jnp.asarray(plan.strong[pk]),
+                               jnp.asarray(plan.coeffs[pk]),
+                               jnp.asarray(plan.diag[pk]))
+            losses.append(float(loss))
+        param_bytes = sum(x.size * x.dtype.itemsize
+                          for x in jax.tree.leaves(state.silo_params)) / n
 
     # simulated wall-clock (model-size-aware workload)
-    param_bytes = sum(x.size * x.dtype.itemsize
-                      for x in jax.tree.leaves(state.silo_params)) / n
     wl_model = dataclasses.replace(
         FEMNIST, name=cfg.arch, model_size_mbits=param_bytes * 8 / 1e6)
     from repro.core.simulator import simulate
@@ -143,6 +199,10 @@ def main():
     ap.add_argument("--seq-len", type=int, default=32)
     ap.add_argument("--batch-size", type=int, default=4)
     ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--mesh", default=None,
+                    help="silo shards: an int, 'auto', or unset for the "
+                         "legacy per-round runtime")
+    ap.add_argument("--lora-rank", type=int, default=0)
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--set", dest="overrides", action="append", default=[],
                     metavar="KEY=VALUE",
@@ -150,10 +210,14 @@ def main():
                          "--set seed=3 --set batch_size=8")
     args = ap.parse_args()
     from repro.config_cli import apply_overrides
+    mesh = args.mesh
+    if mesh is not None and mesh != "auto":
+        mesh = int(mesh)
     cfg = TrainConfig(
         arch=args.arch, topology=args.topology, network=args.network,
         silos=args.silos, rounds=args.rounds, t=args.t,
-        seq_len=args.seq_len, batch_size=args.batch_size, lr=args.lr)
+        seq_len=args.seq_len, batch_size=args.batch_size, lr=args.lr,
+        mesh=mesh, lora_rank=args.lora_rank)
     out = run_reduced_fl(apply_overrides(cfg, args.overrides))
     out.pop("losses")
     print(json.dumps(out, indent=1))

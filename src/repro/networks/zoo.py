@@ -287,6 +287,22 @@ def ebone(capacity_gbps: float = 10.0) -> NetworkSpec:
                   hetero_seed=87, capacity_jitter=0.25, compute_jitter=0.20)
 
 
+def wan(num_silos: int = 64, capacity_gbps: float = 10.0) -> NetworkSpec:
+    """Generated planetary WAN with `num_silos` sites — not a paper
+
+    network, but the same latency model over the union of the real
+    metro anchors above. Used where the paper's five topologies are too
+    small (e.g. mesh-sharding scaling benchmarks want >= 64 silos so
+    every shard owns several). Deterministic in `num_silos`.
+    """
+    metros = list(dict.fromkeys(_EXODUS_METROS + _EBONE_METROS
+                                + [(n, la, lo) for n, la, lo in _AMAZON_SITES]))
+    sites = _expand_metros(metros, num_silos, seed=1000 + num_silos)
+    return _build(f"wan{num_silos}", sites, capacity_gbps=capacity_gbps,
+                  hetero_seed=1000 + num_silos, capacity_jitter=0.25,
+                  compute_jitter=0.20)
+
+
 NETWORKS = {
     "gaia": gaia,
     "amazon": amazon,
@@ -297,7 +313,10 @@ NETWORKS = {
 
 
 def get_network(name: str, capacity_gbps: float = 10.0) -> NetworkSpec:
+    if name.startswith("wan") and name[3:].isdigit():
+        return wan(int(name[3:]), capacity_gbps)
     try:
         return NETWORKS[name](capacity_gbps)
     except KeyError:
-        raise KeyError(f"unknown network {name!r}; have {sorted(NETWORKS)}") from None
+        raise KeyError(f"unknown network {name!r}; have {sorted(NETWORKS)} "
+                       "or wan<K> (generated)") from None

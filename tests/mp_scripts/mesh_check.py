@@ -1,0 +1,109 @@
+"""Mesh-sharded FL runtime checks at D=8. Run in a SUBPROCESS with
+xla_force_host_platform_device_count=8 (tests/test_fl_mesh.py drives
+this); the main pytest process must keep seeing 1 device. The same
+assertions also run in-process in the fl-mesh CI job, where the whole
+pytest process is launched with 8 forced host devices."""
+
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.delay import FEMNIST  # noqa: E402
+from repro.fl import dpasgd, mesh as flmesh, runtime as rtmod  # noqa: E402
+from repro.networks.zoo import get_network  # noqa: E402
+from repro.optim import flat_sgd  # noqa: E402
+
+D_MODEL = 8
+
+
+def _toy_init(key):
+    return {"w": jax.random.normal(key, (D_MODEL,)), "b": jnp.zeros((3,))}
+
+
+def _toy_loss(p, batch):
+    return jnp.sum((p["w"] - batch["t"]) ** 2) + jnp.sum(p["b"] ** 2)
+
+
+def _run_single(plan, key, batches_all, momentum):
+    n = int(plan.diag.shape[1])
+    opt = flat_sgd(0.05, momentum=momentum)
+    rt = rtmod.make_flat_runtime(plan, jax.eval_shape(_toy_init, key), n)
+    state = rtmod.init_flat_state(_toy_init, opt, rt, key)
+    cycle = rtmod.make_cycle_fn(rt, loss_fn=_toy_loss, opt=opt)
+    r = batches_all.shape[0]
+    state, losses = cycle(state, {"t": jnp.asarray(batches_all)},
+                          jnp.asarray(rt.strong[:r]),
+                          jnp.asarray(rt.coeffs[:r]),
+                          jnp.asarray(rt.diag[:r]))
+    return rt, state, np.asarray(losses)
+
+
+def _run_mesh(plan, key, batches_all, momentum, backend):
+    n = int(plan.diag.shape[1])
+    opt = flat_sgd(0.05, momentum=momentum)
+    rt = rtmod.make_flat_runtime(plan, jax.eval_shape(_toy_init, key), n)
+    mrt = flmesh.make_mesh_runtime(rt)
+    state = flmesh.init_mesh_state(_toy_init, opt, mrt, key)
+    cycle = rtmod.make_cycle_fn(mrt, loss_fn=_toy_loss, opt=opt,
+                                gossip=backend)
+    r = batches_all.shape[0]
+    state, losses = cycle(state, {"t": jnp.asarray(batches_all)},
+                          jnp.asarray(rt.strong[:r]),
+                          jnp.asarray(rt.coeffs[:r]),
+                          jnp.asarray(rt.diag[:r]))
+    return mrt, state, np.asarray(losses), cycle
+
+
+def main():
+    assert jax.device_count() == 8, jax.device_count()
+
+    for net_name in ("gaia", "amazon"):
+        net = get_network(net_name)
+        plan, _, _ = dpasgd.multigraph_plan(net, FEMNIST, t=5)
+        r, n = plan.num_rounds_cycle, net.num_silos
+        rng = np.random.default_rng(0)
+        batches = np.asarray(rng.normal(size=(r, 2, n, 1, D_MODEL)),
+                             np.float32)
+        key = jax.random.PRNGKey(7)
+        rt, s1, l1 = _run_single(plan, key, batches, momentum=0.9)
+        for backend in ("halo", "all_gather"):
+            mrt, sm, lm, _ = _run_mesh(plan, key, batches, 0.9, backend)
+            flat = flmesh.gather_flat_state(mrt, sm)
+            np.testing.assert_array_equal(np.asarray(s1.w),
+                                          np.asarray(flat.w))
+            np.testing.assert_array_equal(np.asarray(s1.buffers),
+                                          np.asarray(flat.buffers))
+            np.testing.assert_array_equal(
+                np.asarray(s1.opt_state["mu"]),
+                np.asarray(flat.opt_state["mu"]))
+            # reported loss scalars: ~1 ulp reduce-emitter tolerance
+            # (the training state above is exact; DESIGN.md §16)
+            np.testing.assert_allclose(l1, lm, rtol=5e-7, atol=0)
+            print(f"{net_name}-{backend}-bitexact-ok")
+
+    # live-swap contract: two different schedules over the SAME CSR
+    # structure run through ONE trace of the mesh cycle
+    net = get_network("gaia")
+    plan, _, _ = dpasgd.multigraph_plan(net, FEMNIST, t=5)
+    r, n = plan.num_rounds_cycle, net.num_silos
+    rng = np.random.default_rng(1)
+    batches = np.asarray(rng.normal(size=(r, 1, n, 1, D_MODEL)), np.float32)
+    key = jax.random.PRNGKey(9)
+    mrt, state, _, cycle = _run_mesh(plan, key, batches, 0.9, "halo")
+    swapped = ~np.asarray(mrt.strong)  # arbitrary same-shape schedule
+    state, losses = cycle(state, {"t": jnp.asarray(batches)},
+                          jnp.asarray(swapped),
+                          jnp.asarray(mrt.coeffs),
+                          jnp.asarray(mrt.diag))
+    assert losses.shape == (r,)
+    assert cycle.trace_count["count"] == 1, cycle.trace_count
+    print("swap-trace-once-ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,490 @@
+"""Mesh-sharded flat FL runtime (fl/mesh.py, DESIGN.md §16).
+
+Tier-1 runs this file on however many devices the host exposes (1 in
+the default run — the mesh degenerates to one shard but every table,
+pad and collective still executes). The `fl-mesh` CI job re-runs the
+SAME file with XLA_FLAGS=--xla_force_host_platform_device_count=8, so
+the bit-exactness assertions also hold at 8 real shards; the slow tier
+additionally drives tests/mp_scripts/mesh_check.py in a subprocess so
+8-device coverage exists locally too.
+
+Backend equivalence on random CSR graphs needs NO devices at all: the
+gossip collectives run under `jax.vmap(..., axis_name=...)`, which
+gives every shard its own named-axis instance in one process.
+"""
+
+import pathlib
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.delay import FEMNIST
+from repro.fl import dpasgd, gossip, lora
+from repro.fl import mesh as flmesh
+from repro.fl import runtime as rtmod
+from repro.kernels.gossip_combine.ops import csr_sort
+from repro.kernels.gossip_combine.ref import edge_aggregate_ref
+from repro.launch.mesh import fl_mesh, silo_assignment
+from repro.networks.zoo import get_network
+from repro.optim import flat_sgd
+
+D_MODEL = 8
+
+
+def _toy_init(key):
+    return {"w": jax.random.normal(key, (D_MODEL,)), "b": jnp.zeros((3,))}
+
+
+def _toy_loss(p, batch):
+    return jnp.sum((p["w"] - batch["t"]) ** 2) + jnp.sum(p["b"] ** 2)
+
+
+def _run_single(plan, key, batches_all, momentum=0.9):
+    n = int(plan.diag.shape[1])
+    opt = flat_sgd(0.05, momentum=momentum)
+    rt = rtmod.make_flat_runtime(plan, jax.eval_shape(_toy_init, key), n)
+    state = rtmod.init_flat_state(_toy_init, opt, rt, key)
+    cycle = rtmod.make_cycle_fn(rt, loss_fn=_toy_loss, opt=opt)
+    r = batches_all.shape[0]
+    state, losses = cycle(state, {"t": jnp.asarray(batches_all)},
+                          jnp.asarray(rt.strong[:r]),
+                          jnp.asarray(rt.coeffs[:r]),
+                          jnp.asarray(rt.diag[:r]))
+    return rt, state, np.asarray(losses)
+
+
+def _run_mesh(plan, key, batches_all, momentum=0.9, backend="halo"):
+    n = int(plan.diag.shape[1])
+    opt = flat_sgd(0.05, momentum=momentum)
+    rt = rtmod.make_flat_runtime(plan, jax.eval_shape(_toy_init, key), n)
+    mrt = flmesh.make_mesh_runtime(rt)  # every device the host exposes
+    state = flmesh.init_mesh_state(_toy_init, opt, mrt, key)
+    cycle = rtmod.make_cycle_fn(mrt, loss_fn=_toy_loss, opt=opt,
+                                gossip=backend)
+    r = batches_all.shape[0]
+    state, losses = cycle(state, {"t": jnp.asarray(batches_all)},
+                          jnp.asarray(rt.strong[:r]),
+                          jnp.asarray(rt.coeffs[:r]),
+                          jnp.asarray(rt.diag[:r]))
+    return mrt, state, np.asarray(losses), cycle
+
+
+# ---------------------------------------------------------------------------
+# layout invariants (host-side, no devices involved)
+# ---------------------------------------------------------------------------
+
+
+def test_silo_assignment_geometry():
+    a = silo_assignment(11, 4)
+    assert (a.per_shard, a.rows_padded) == (3, 12)
+    for s in range(11):
+        p = a.shard_of(s)
+        assert 0 <= p < 4 and p * a.per_shard + a.local_of(s) == s
+    assert silo_assignment(8, 8).per_shard == 1
+    assert silo_assignment(3, 8).rows_padded == 8
+
+
+def _random_plan_arrays(n, rng, isolated=()):
+    """Random directed CSR edge structure avoiding `isolated` nodes."""
+    nodes = [i for i in range(n) if i not in isolated]
+    pairs = set()
+    while len(pairs) < max(1, 2 * len(nodes)):
+        i, j = rng.choice(nodes, 2, replace=False)
+        pairs.add((min(i, j), max(i, j)))
+    src = np.array([e for i, j in sorted(pairs) for e in (i, j)], np.int64)
+    dst = np.array([e for i, j in sorted(pairs) for e in (j, i)], np.int64)
+    order, row_ptr = csr_sort(dst, n)
+    return src[order].astype(np.int32), dst[order].astype(np.int32), row_ptr
+
+
+@pytest.mark.parametrize("n,d,isolated", [(10, 2, ()), (11, 4, (0, 7)),
+                                          (16, 8, (3,)), (5, 8, ())])
+def test_block_layout_invariants(n, d, isolated):
+    rng = np.random.default_rng(n * 100 + d)
+    src, dst, _ = _random_plan_arrays(n, rng, isolated)
+    per = -(-n // d)
+    counts, edge_perm, dst_local, src_global = flmesh.block_layout(
+        src_sorted=src, dst_sorted=dst, d=d, per=per)
+    e2 = len(dst)
+    real = edge_perm[edge_perm < e2]
+    # every real edge appears exactly once, in sorted order
+    np.testing.assert_array_equal(np.sort(real), np.arange(e2))
+    np.testing.assert_array_equal(real, np.sort(real))
+    assert counts.sum() == e2
+    for p in range(d):
+        c = int(counts[p])
+        # real edges: local dst in range and consistent with global
+        np.testing.assert_array_equal(
+            dst_local[p, :c] + p * per,
+            dst[int(edge_perm[p * dst_local.shape[1]]):][:c])
+        assert (dst_local[p, :c] < per).all()
+        # pad edges: dst == per => segment_sum drops them
+        assert (dst_local[p, c:] == per).all()
+        np.testing.assert_array_equal(src_global[p, :c],
+                                      src[edge_perm[p * dst_local.shape[1]:
+                                                    p * dst_local.shape[1]
+                                                    + c]])
+
+
+# ---------------------------------------------------------------------------
+# gossip backend equivalence on random CSR graphs (vmap named axis —
+# multi-shard semantics without multi-device hardware)
+# ---------------------------------------------------------------------------
+
+
+def _vmap_gather(w_pad, d, per, layout, halo, backend):
+    """Run a csr gather backend with vmap providing the silo axis."""
+    _, _, _, src_global = layout
+    w_shards = w_pad.reshape(d, per, w_pad.shape[-1])
+    if backend == "all_gather":
+        fn = lambda w, s: gossip.csr_gather_all(w, s, "s")
+        return jax.vmap(fn, axis_name="s")(w_shards,
+                                           jnp.asarray(src_global))
+    sends = tuple(jnp.asarray(t) for t in halo.send_idx)
+
+    def fn(w, gath, *sends_p):
+        return gossip.csr_gather_halo(w, sends_p, halo.perms, gath, "s")
+
+    return jax.vmap(fn, axis_name="s")(w_shards,
+                                       jnp.asarray(halo.gather_idx), *sends)
+
+
+@pytest.mark.parametrize("n,d,isolated", [(12, 3, ()), (11, 4, (2, 9)),
+                                          (9, 2, (0,))])
+def test_csr_backends_match_flat_aggregate(n, d, isolated):
+    """all_gather == halo == single-device edge_aggregate, with isolated
+    nodes exercising empty CSR rows (S3)."""
+    rng = np.random.default_rng(7 * n + d)
+    src, dst, _ = _random_plan_arrays(n, rng, isolated)
+    per = -(-n // d)
+    npad, t = d * per, 6
+    layout = flmesh.block_layout(dst_sorted=dst, src_sorted=src, d=d, per=per)
+    counts, edge_perm, dst_local, src_global = layout
+    halo = flmesh._build_halo(counts, src_global, d, per)
+
+    w = np.asarray(rng.normal(size=(npad, t)), np.float32)
+    coeffs = np.asarray(rng.uniform(0.1, 1.0, size=len(dst)), np.float32)
+    diag = np.asarray(rng.uniform(0.1, 1.0, size=n), np.float32)
+
+    # oracle: single-device flat aggregation over fresh buffers
+    ref = edge_aggregate_ref(jnp.asarray(w[:n]), jnp.asarray(w[src]),
+                             jnp.asarray(coeffs), jnp.asarray(dst),
+                             jnp.asarray(diag))
+
+    e_per = dst_local.shape[1]
+    coeffs_p = np.concatenate([coeffs, [0.0]]).astype(np.float32)[
+        np.minimum(edge_perm, len(dst))].reshape(d, e_per)
+    diag_p = np.concatenate([diag, np.ones(npad - n, np.float32)])
+
+    for backend in ("all_gather", "halo"):
+        rows = _vmap_gather(jnp.asarray(w), d, per, layout, halo, backend)
+        # gathered source rows must be exact for every REAL edge
+        for p in range(d):
+            c = int(counts[p])
+            np.testing.assert_array_equal(np.asarray(rows)[p, :c],
+                                          w[src_global[p, :c]])
+        agg = jax.vmap(edge_aggregate_ref)(
+            jnp.asarray(w.reshape(d, per, t)), rows,
+            jnp.asarray(coeffs_p), jnp.asarray(dst_local),
+            jnp.asarray(diag_p.reshape(d, per)))
+        got = np.asarray(agg).reshape(npad, t)[:n]
+        np.testing.assert_array_equal(got, np.asarray(ref))
+
+
+def test_gossip_dense_matches_flat_aggregate():
+    """The production all_gather consensus (gossip_dense) equals the
+    flat runtime's edge_aggregate on the same consensus matrix."""
+    n, t = 8, 5
+    rng = np.random.default_rng(0)
+    src, dst, _ = _random_plan_arrays(n, rng, isolated=(5,))
+    coeffs = np.asarray(rng.uniform(0.1, 0.5, len(dst)), np.float32)
+    diag = np.asarray(rng.uniform(0.3, 1.0, n), np.float32)
+    a = np.zeros((n, n), np.float32)
+    a[np.arange(n), np.arange(n)] = diag
+    np.add.at(a, (dst, src), coeffs)
+    w = np.asarray(rng.normal(size=(n, t)), np.float32)
+
+    dense = jax.vmap(lambda wi: gossip.gossip_dense(wi, jnp.asarray(a), "s"),
+                     axis_name="s")(jnp.asarray(w))
+    ref = edge_aggregate_ref(jnp.asarray(w), jnp.asarray(w[src]),
+                             jnp.asarray(coeffs), jnp.asarray(dst),
+                             jnp.asarray(diag))
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(ref),
+                               rtol=2e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# whole-cycle bit-exactness: sharded == single-device oracle
+# ---------------------------------------------------------------------------
+
+
+def _cycle_batches(plan, n, seed, u=1):
+    r = plan.num_rounds_cycle
+    rng = np.random.default_rng(seed)
+    return np.asarray(rng.normal(size=(r, u, n, 1, D_MODEL)), np.float32)
+
+
+@pytest.mark.parametrize("net_name", ["gaia", "amazon", "geant", "exodus",
+                                      "ebone"])
+def test_mesh_cycle_bitexact_paper_networks(net_name):
+    """Params, edge buffers AND momentum bit-for-bit equal to the
+    single-device oracle over a full multigraph cycle (the acceptance
+    contract). Runs at whatever device count the process has."""
+    net = get_network(net_name)
+    plan, _, _ = dpasgd.multigraph_plan(net, FEMNIST, t=5)
+    n = net.num_silos
+    batches = _cycle_batches(plan, n, seed=net.num_silos)
+    key = jax.random.PRNGKey(7)
+    _, s1, l1 = _run_single(plan, key, batches)
+    mrt, sm, lm, _ = _run_mesh(plan, key, batches)
+    flat = flmesh.gather_flat_state(mrt, sm)
+    np.testing.assert_array_equal(np.asarray(s1.w), np.asarray(flat.w))
+    np.testing.assert_array_equal(np.asarray(s1.buffers),
+                                  np.asarray(flat.buffers))
+    np.testing.assert_array_equal(np.asarray(s1.opt_state["mu"]),
+                                  np.asarray(flat.opt_state["mu"]))
+    # loss scalars: reduce-to-scalar emitter may differ by ~1 ulp
+    # between the two loop programs (DESIGN.md §16)
+    np.testing.assert_allclose(l1, lm, rtol=5e-7, atol=0)
+
+
+def test_all_gather_backend_bitexact():
+    net = get_network("gaia")
+    plan, _, _ = dpasgd.multigraph_plan(net, FEMNIST, t=5)
+    batches = _cycle_batches(plan, net.num_silos, seed=1)
+    key = jax.random.PRNGKey(3)
+    _, s1, _ = _run_single(plan, key, batches)
+    mrt, sm, _, _ = _run_mesh(plan, key, batches, backend="all_gather")
+    flat = flmesh.gather_flat_state(mrt, sm)
+    np.testing.assert_array_equal(np.asarray(s1.w), np.asarray(flat.w))
+    np.testing.assert_array_equal(np.asarray(s1.buffers),
+                                  np.asarray(flat.buffers))
+
+
+def test_mesh_live_swap_traces_once():
+    """Controller contract: a swapped schedule is just new arguments —
+    the shard_map cycle never re-traces."""
+    net = get_network("gaia")
+    plan, _, _ = dpasgd.multigraph_plan(net, FEMNIST, t=5)
+    batches = _cycle_batches(plan, net.num_silos, seed=2)
+    key = jax.random.PRNGKey(5)
+    mrt, state, _, cycle = _run_mesh(plan, key, batches)
+    r = batches.shape[0]
+    swapped = ~np.asarray(mrt.strong[:r])
+    state, losses = cycle(state, {"t": jnp.asarray(batches)},
+                          jnp.asarray(swapped),
+                          jnp.asarray(mrt.coeffs[:r]),
+                          jnp.asarray(mrt.diag[:r]))
+    assert losses.shape == (r,)
+    assert cycle.trace_count["count"] == 1, cycle.trace_count
+
+
+def test_fl_mesh_errors():
+    with pytest.raises(RuntimeError, match="devices"):
+        fl_mesh(jax.device_count() + 1)
+    net = get_network("gaia")
+    plan, _, _ = dpasgd.multigraph_plan(net, FEMNIST, t=5)
+    key = jax.random.PRNGKey(0)
+    rt = rtmod.make_flat_runtime(plan, jax.eval_shape(_toy_init, key), 11)
+    opt = flat_sgd(0.05)
+    with pytest.raises(ValueError, match="gossip"):
+        rtmod.make_cycle_fn(rt, loss_fn=_toy_loss, opt=opt, gossip="halo")
+    mrt = flmesh.make_mesh_runtime(rt, 1)
+    with pytest.raises(ValueError, match="backend"):
+        rtmod.make_cycle_fn(mrt, loss_fn=_toy_loss, opt=opt, gossip="bogus")
+    with pytest.raises(ValueError, match="single-device"):
+        rtmod.make_cycle_fn(mrt, loss_fn=_toy_loss, opt=opt,
+                            aggregator="dense")
+
+
+# ---------------------------------------------------------------------------
+# LoRA deltas over a shared base (fl/lora.py)
+# ---------------------------------------------------------------------------
+
+
+def test_lora_init_is_identity():
+    key = jax.random.PRNGKey(0)
+    base = {"m": jax.random.normal(key, (16, 12)),
+            "s": jax.random.normal(key, (3, 10, 8)),
+            "b": jnp.ones((12,))}
+    ad = lora.make_lora_adapter(base, rank=2)
+    p0 = ad.apply(ad.init(jax.random.PRNGKey(1)))
+    for k in base:
+        np.testing.assert_array_equal(np.asarray(p0[k]), np.asarray(base[k]))
+
+
+def test_lora_size_and_template():
+    key = jax.random.PRNGKey(0)
+    base = {"m": jax.random.normal(key, (64, 48)), "b": jnp.ones((48,)),
+            "tiny": jnp.ones((2, 2))}
+    tmpl = jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype),
+                        base)
+    t_lora = lora.lora_size(tmpl, 4)
+    # (64+48)*4 low-rank + 48 dense bias + 4 dense tiny (low-rank would
+    # be bigger than 2x2, so it stays dense)
+    assert t_lora == (64 + 48) * 4 + 48 + 4
+    ad = lora.make_lora_adapter(base, rank=4)
+    flat = sum(int(np.prod(l.shape)) for l in
+               jax.tree.leaves(jax.eval_shape(ad.init, key)))
+    assert flat == t_lora
+    assert t_lora < sum(int(np.prod(l.shape))
+                        for l in jax.tree.leaves(base))
+
+
+def test_lora_mesh_cycle_matches_single_device():
+    """LoRA deltas ride the mesh runtime unchanged: T is just smaller."""
+    net = get_network("gaia")
+    plan, _, _ = dpasgd.multigraph_plan(net, FEMNIST, t=5)
+    n = net.num_silos
+    key = jax.random.PRNGKey(0)
+    base = {"w1": jax.random.normal(key, (12, 8)), "b": jnp.zeros((8,))}
+    ad = lora.make_lora_adapter(base, rank=2)
+
+    def loss_fn(p, batch):
+        return jnp.mean((batch["x"] @ p["w1"] + p["b"]) ** 2)
+
+    opt = flat_sgd(0.05, momentum=0.9)
+    rt = rtmod.make_flat_runtime(plan, jax.eval_shape(ad.init, key), n)
+    r = plan.num_rounds_cycle
+    rng = np.random.default_rng(0)
+    batches = {"x": jnp.asarray(rng.normal(size=(r, 1, n, 2, 12)),
+                                jnp.float32)}
+    args = (batches, jnp.asarray(rt.strong), jnp.asarray(rt.coeffs),
+            jnp.asarray(rt.diag))
+    s0 = rtmod.init_flat_state(ad.init, opt, rt, key)
+    c0 = rtmod.make_cycle_fn(rt, loss_fn=ad.wrap_loss(loss_fn), opt=opt)
+    s0, l0 = c0(s0, *args)
+
+    mrt = flmesh.make_mesh_runtime(rt)
+    sm = flmesh.init_mesh_state(ad.init, opt, mrt, key)
+    cm = rtmod.make_cycle_fn(mrt, loss_fn=ad.wrap_loss(loss_fn), opt=opt)
+    sm, lm = cm(sm, *args)
+    flat = flmesh.gather_flat_state(mrt, sm)
+    np.testing.assert_array_equal(np.asarray(s0.w), np.asarray(flat.w))
+    np.testing.assert_array_equal(np.asarray(s0.buffers),
+                                  np.asarray(flat.buffers))
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(lm),
+                               rtol=5e-7, atol=0)
+    # training actually moved the deltas
+    assert float(np.abs(np.asarray(s0.w)).max()) > 0
+
+
+def test_fl_mesh_roofline_validates_lora():
+    """The memory model the tentpole rests on: full per-silo state for
+    gemma3-27b cannot fit a shard device, the LoRA layout can."""
+    from repro.launch.roofline import fl_mesh_report
+    r = fl_mesh_report("gemma3-27b", num_shards=8, rank=8)
+    assert not r["full"]["fits"]
+    assert r["lora"]["fits"]
+    assert r["t_lora"] < r["t_full"] / 100
+    coll = r["lora"]["collective_bytes_per_round"]
+    assert coll["halo"] <= coll["all_gather"]
+    small = fl_mesh_report("mamba2-370m", num_shards=8, rank=8)
+    assert small["lora"]["fits"]
+
+
+# ---------------------------------------------------------------------------
+# CI smoke (fl-mesh job): femnist, one eval period, mesh vs oracle
+# ---------------------------------------------------------------------------
+
+
+def test_femnist_mesh_smoke():
+    """run_fl on gaia/FEMNIST for one short horizon: the mesh path must
+    reproduce the oracle's accuracies exactly and losses to ~1 ulp.
+    This is the <90 s fl-mesh CI smoke."""
+    from repro.fl.trainer import FLConfig, run_fl
+    base = dict(dataset="femnist", network="gaia", rounds=2, eval_every=2,
+                samples_per_silo=16, batch_size=4, momentum=0.9, seed=3)
+    r1 = run_fl(FLConfig(**base))
+    r2 = run_fl(FLConfig(**base, mesh="auto"))
+    np.testing.assert_allclose(np.asarray(r1.round_losses),
+                               np.asarray(r2.round_losses),
+                               rtol=5e-7, atol=0)
+    np.testing.assert_array_equal(np.asarray(r1.eval_accs),
+                                  np.asarray(r2.eval_accs))
+
+
+def test_wan_generated_network():
+    net = get_network("wan64")
+    assert net.num_silos == 64 and net.name == "wan64"
+    assert net.latency_ms.shape == (64, 64)
+    np.testing.assert_array_equal(net.latency_ms,
+                                  get_network("wan64").latency_ms)
+    plan, _, _ = dpasgd.multigraph_plan(net, FEMNIST, t=5)
+    assert plan.num_rounds_cycle > 0
+
+
+# ---------------------------------------------------------------------------
+# slow tier: 8-device subprocess + controller/trainer integration
+# ---------------------------------------------------------------------------
+
+
+def _run_script(script, timeout=1500, extra_env=()):
+    src = pathlib.Path(__file__).parent.parent / "src"
+    # JAX_PLATFORMS=cpu: don't let the child probe accelerator plugins
+    # the pytest process may already hold (libtpu serializes on a
+    # lockfile; the child would sleep in TPU discovery forever).
+    env = {"PYTHONPATH": str(src), "PATH": "/usr/bin:/bin",
+           "JAX_PLATFORMS": "cpu", **dict(extra_env)}
+    return subprocess.run([sys.executable, str(script)],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=env)
+
+
+@pytest.mark.slow
+def test_mesh_runtime_8_devices():
+    script = (pathlib.Path(__file__).parent / "mp_scripts"
+              / "mesh_check.py")
+    r = _run_script(script)
+    assert r.returncode == 0, r.stdout + r.stderr
+    for marker in ("gaia-halo-bitexact-ok", "gaia-all_gather-bitexact-ok",
+                   "amazon-halo-bitexact-ok",
+                   "amazon-all_gather-bitexact-ok", "swap-trace-once-ok"):
+        assert marker in r.stdout, r.stdout
+
+
+@pytest.mark.slow
+def test_trainer_mesh_parity_longer():
+    from repro.fl.trainer import FLConfig, run_fl
+    base = dict(dataset="femnist", network="amazon", rounds=8, eval_every=4,
+                samples_per_silo=16, batch_size=4, momentum=0.9, seed=0)
+    r1 = run_fl(FLConfig(**base))
+    r2 = run_fl(FLConfig(**base, mesh="auto", gossip="all_gather"))
+    np.testing.assert_allclose(np.asarray(r1.round_losses),
+                               np.asarray(r2.round_losses),
+                               rtol=5e-7, atol=0)
+    np.testing.assert_array_equal(np.asarray(r1.eval_accs),
+                                  np.asarray(r2.eval_accs))
+
+
+@pytest.mark.slow
+def test_controller_mesh_nominal_parity():
+    from repro.design.controller import ControllerConfig, ControllerHarness
+    kw = dict(network="gaia", rounds=24, replan_every=12,
+              samples_per_silo=16, batch_size=4, seed=3)
+    ad = ControllerHarness(ControllerConfig(**kw, mesh="auto")).run(
+        "nominal", adaptive=True)
+    st = ControllerHarness(ControllerConfig(**kw)).run(
+        "nominal", adaptive=True)
+    np.testing.assert_allclose(np.asarray(ad.losses), np.asarray(st.losses),
+                               rtol=5e-7, atol=0)
+    assert ad.swap_rounds == ()
+
+
+@pytest.mark.slow
+def test_fl_llm_finetune_example_runs():
+    """S6: the example actually runs, wired to the sharded runtime."""
+    root = pathlib.Path(__file__).parent.parent
+    src = root / "src"
+    r = subprocess.run(
+        [sys.executable, str(root / "examples" / "fl_llm_finetune.py"),
+         "--rounds", "4", "--silos", "4"],
+        capture_output=True, text=True, timeout=1500,
+        env={"PYTHONPATH": str(src), "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"})
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "wall-clock speedup vs RING" in r.stdout, r.stdout
