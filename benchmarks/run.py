@@ -50,8 +50,8 @@ def main() -> None:
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (ablation_noniid, faults_bench, fig5_convergence,
-                            kernel_bench, population_bench, sim_bench,
-                            table1_cycle_time, table3_isolated,
+                            kernel_bench, obs_bench, population_bench,
+                            sim_bench, table1_cycle_time, table3_isolated,
                             table4_removal, table5_accuracy,
                             table6_tradeoff, tta_bench)
 
@@ -82,11 +82,21 @@ def main() -> None:
         # device-grid candidate throughput + population-engine gates
         # (merges design/grid_jax and design/population_search rows):
         "population": lambda: population_bench.run(quick=args.quick),
+        # observability overhead gate: metrics-on vs off dispatch ratio
+        # + the trace artifact CI uploads (merges obs/ rows):
+        "obs": lambda: obs_bench.run(quick=args.quick),
         "roofline": _roofline_rows,
         # beyond-paper ablation; opt-in (adds ~10 min):
         #   python -m benchmarks.run --only noniid
         "noniid": lambda: ablation_noniid.run(quick=args.quick),
     }
+
+    if only:
+        unknown = sorted(only - suites.keys())
+        if unknown:
+            print(f"unknown --only suite(s): {', '.join(unknown)}; "
+                  f"valid: {', '.join(sorted(suites))}", file=sys.stderr)
+            raise SystemExit(2)
 
     opt_in = {"noniid"}
     print("name,us_per_call,derived")

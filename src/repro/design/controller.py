@@ -281,8 +281,8 @@ class ControllerHarness:
 
     # -- running ----------------------------------------------------------
 
-    def run(self, scenario: str | Scenario,
-            adaptive: bool = False) -> ControlledRun:
+    def run(self, scenario: str | Scenario, adaptive: bool = False,
+            recorder=None) -> ControlledRun:
         """Train ``cfg.rounds`` under a scenario.
 
         ``adaptive=False`` — static schedule, static clock accounting
@@ -291,7 +291,16 @@ class ControllerHarness:
         demotion streak) AND the re-planning controller at segment
         boundaries. Both degrade identically (same effective masks
         absent swaps), so under nominal the two runs are bit-exact.
+
+        ``recorder`` — an `obs.TraceRecorder`: per-silo simulated
+        spans for every segment (observed delays), host spans around
+        each cycle dispatch, and controller instants (observe/replan/
+        swap) at segment boundaries. Purely additive — the training
+        path, taus and the single-trace invariant are untouched
+        (tests/test_obs.py asserts this across live swaps).
         """
+        import contextlib
+
         import jax.numpy as jnp
 
         cfg = self.cfg
@@ -300,7 +309,8 @@ class ControllerHarness:
                                max_stale=sc.max_stale, adaptive=adaptive)
         vec = self.vec0
         tplan, rt = self.tplan0, self.rt0
-        session = FaultedSession(tplan, schedule=sc.schedule, policy=policy)
+        session = FaultedSession(tplan, schedule=sc.schedule, policy=policy,
+                                 record_obs=recorder is not None)
         assumed = tplan.d0.copy()
 
         state = self._init_state()
@@ -311,6 +321,7 @@ class ControllerHarness:
         swaps: list[int] = []
         vectors: list[tuple[int, ...]] = [vec]
         demoted = 0
+        sim_t = 0.0
         for s in range(num_segments):
             seg = session.advance(re)
             taus.append(seg.taus)
@@ -319,10 +330,21 @@ class ControllerHarness:
             pks = seg.phases
             batches = {k: v[s * re:(s + 1) * re]
                        for k, v in self._batches.items()}
-            state, seg_losses = self._cycle_fn(
-                state, batches, jnp.asarray(strong),
-                jnp.asarray(rt.coeffs[pks]), jnp.asarray(rt.diag[pks]))
-            losses.extend(float(x) for x in np.asarray(seg_losses))
+            if recorder is not None:
+                sim_t = recorder.add_faulted_spans(
+                    self.tplan0.pair_i, self.tplan0.pair_j, seg,
+                    t0_ms=sim_t)
+                span = recorder.host_span(
+                    "dispatch", segment=s, scenario=sc.schedule.name,
+                    adaptive=adaptive)
+            else:
+                span = contextlib.nullcontext()
+            with span:
+                state, seg_losses = self._cycle_fn(
+                    state, batches, jnp.asarray(strong),
+                    jnp.asarray(rt.coeffs[pks]), jnp.asarray(rt.diag[pks]))
+                seg_losses = np.asarray(seg_losses)
+            losses.extend(float(x) for x in seg_losses)
 
             if adaptive and s + 1 < num_segments:
                 est = seg.base.mean(axis=0)
@@ -330,7 +352,14 @@ class ControllerHarness:
                     est = np.where(seg.dead.any(axis=0),
                                    np.maximum(est, policy.timeout_ms), est)
                 dev = float(np.max(np.abs(est - assumed) / assumed))
+                if recorder is not None:
+                    recorder.instant("observe", t_ms=sim_t,
+                                     round=session.round, deviation=dev,
+                                     threshold=cfg.replan_threshold)
                 if dev > cfg.replan_threshold:
+                    if recorder is not None:
+                        recorder.instant("replan", t_ms=sim_t,
+                                         round=session.round, deviation=dev)
                     comp_est = seg.comp_obs.mean(axis=0)
                     new_vec = self._replan_vector(
                         vec, est, comp_est, cfg.rounds - (s + 1) * re)
@@ -341,6 +370,10 @@ class ControllerHarness:
                         session.swap_plan(tplan)
                         swaps.append(session.round)
                         vectors.append(vec)
+                        if recorder is not None:
+                            recorder.instant("swap", t_ms=sim_t,
+                                             round=session.round,
+                                             vector=list(vec))
         acc = float(self._acc_fn(self._get_w(state)))
         return ControlledRun(
             scenario=sc.schedule.name, adaptive=adaptive,

@@ -26,6 +26,7 @@ searched design matches-or-beats Algorithm 1):
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import math
 import time
@@ -101,7 +102,7 @@ def evaluate_frontier(network: str, workload: str, named_vectors, *,
                       rounds: int = 60, window: int = TTA_WINDOW,
                       lr: float = 0.05, batch_size: int = 16,
                       samples_per_silo: int = 64, local_updates: int = 1,
-                      seed: int = 0) -> list[TTAResult]:
+                      seed: int = 0, recorder=None) -> list[TTAResult]:
     """Train a FRONTIER of multiplicity vectors with one shared trace.
 
     ``named_vectors`` is ``[(name, vector), ...]``; the FIRST entry is
@@ -118,6 +119,11 @@ def evaluate_frontier(network: str, workload: str, named_vectors, *,
     `default_rng(seed + 1)` per candidate, same draw order as
     `trainer.run_fl` — whose per-run losses are the equivalence oracle,
     tests/test_design_tta.py).
+
+    ``recorder`` — an `obs.TraceRecorder`: one host wall-clock span per
+    candidate around the whole-run dispatch (the first one includes the
+    shared compile). Does not touch the training path or the
+    shared-trace assertion.
     """
     import jax
     import jax.numpy as jnp
@@ -182,11 +188,18 @@ def evaluate_frontier(network: str, workload: str, named_vectors, *,
                    "y": jnp.asarray(np.stack([y for _, y in per_round]))}
         pks = [j % rt.num_rounds_cycle for j in range(rounds)]
         state = flrt.init_flat_state(spec.init, opt, rt, key)
-        state, losses = cycle_fn(state, batches,
-                                 jnp.asarray(rt.strong[pks]),
-                                 jnp.asarray(rt.coeffs[pks]),
-                                 jnp.asarray(rt.diag[pks]))
-        losses = [float(x) for x in np.asarray(losses)]
+        if recorder is not None:
+            span = recorder.host_span(
+                "compile+dispatch" if not out else "dispatch",
+                candidate=name, rounds=rounds)
+        else:
+            span = contextlib.nullcontext()
+        with span:
+            state, losses = cycle_fn(state, batches,
+                                     jnp.asarray(rt.strong[pks]),
+                                     jnp.asarray(rt.coeffs[pks]),
+                                     jnp.asarray(rt.diag[pks]))
+            losses = [float(x) for x in np.asarray(losses)]
         acc = float(acc_fn(eval_params_fn(state.w)))
         train_s = time.perf_counter() - t0
         cycle_ms = tplan.cycle_times(rounds)

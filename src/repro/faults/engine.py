@@ -78,6 +78,10 @@ class FaultedSegment:
     comp_obs: np.ndarray     # (r, N) f64 — observed per-silo compute
     paid_timeout: np.ndarray  # (r,) bool — clock hit the timeout
     phases: np.ndarray       # (r,) int64 — plan state index per round
+    obs: np.ndarray | None = None  # (r, E) f64 observed per-pair delay
+    #   (what the round's strong pairs block on; populated only when
+    #   the session is built with record_obs=True — the obs layer's
+    #   span source, inert otherwise)
 
 
 @dataclasses.dataclass
@@ -95,6 +99,9 @@ class FaultedSession:
     plan: "object"                       # timing.TimingPlan (recurrence)
     schedule: FaultSchedule = NOMINAL
     policy: DegradePolicy = DegradePolicy()
+    record_obs: bool = False             # keep per-round observed pair
+    #   delays on each segment (obs/trace.py span source); pure extra
+    #   storage — decisions and taus are identical either way
 
     def __post_init__(self):
         plan = self.plan
@@ -156,6 +163,8 @@ class FaultedSession:
         eff_out = np.empty((num_rounds, e), bool)
         paid = np.zeros(num_rounds, bool)
         phases = np.empty(num_rounds, np.int64)
+        obs_out = (np.empty((num_rounds, e), np.float64)
+                   if self.record_obs else None)
         timeout = self.policy.timeout_ms
         max_stale = self.policy.max_stale
         adaptive = self.policy.adaptive
@@ -175,6 +184,8 @@ class FaultedSession:
                                      np.float64(self._prev_tau),
                                      self._prev_tau + self._d_cur)
             obs = cand_strong * link_pair[r] + extra[r]
+            if obs_out is not None:
+                obs_out[r] = obs
             over = obs > timeout
             want = planned & (dead[r] | over)
             forced = planned & ~dead[r] & (self._streak >= max_stale)
@@ -253,7 +264,7 @@ class FaultedSession:
         return FaultedSegment(
             start=start, taus=taus, planned=planned_out, eff=eff_out,
             dead=dead, base=base, crashed=arr.crashed, comp_obs=comp_obs,
-            paid_timeout=paid, phases=phases)
+            paid_timeout=paid, phases=phases, obs=obs_out)
 
     def _d0_base(self, link_pair: np.ndarray,
                  extra: np.ndarray) -> np.ndarray:

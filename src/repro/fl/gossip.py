@@ -200,3 +200,20 @@ def csr_gather_halo(w: jax.Array, send_idx: Sequence[jax.Array],
         parts.append(jax.lax.ppermute(w[idx_k], axis, perm_k))
     stacked = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=0)
     return stacked[gather_idx]
+
+
+def fabric_rows_per_round(backend: str, *, halo_rows: int, num_shards: int,
+                          rows_padded: int) -> int:
+    """Total param rows the gather backend moves across the fabric per
+    round, summed over all shards — the obs layer's `fabric_bytes`
+    column divides into this times the flat row size.
+
+    "halo" ships each shard's boundary-crossing rows only (`halo_rows`
+    per shard, from `HaloPlan`); "all_gather" materializes the full
+    padded matrix on every shard.
+    """
+    if backend == "halo":
+        return num_shards * halo_rows
+    if backend == "all_gather":
+        return num_shards * rows_padded
+    raise ValueError(f"unknown gossip backend {backend!r}")

@@ -287,7 +287,8 @@ def gather_flat_state(mrt: MeshRuntime, state: FlatFLState) -> FlatFLState:
 
 def make_mesh_cycle_fn(mrt: MeshRuntime, *, loss_fn, opt, lr_scale=1.0,
                        gossip_backend: str = "halo",
-                       donate: bool | None = None):
+                       donate: bool | None = None,
+                       metrics=None):
     """Sharded twin of `runtime.make_cycle_fn` — same external contract.
 
     Returns ``cycle(state, batches, strong, coeffs, diag)`` taking plan
@@ -302,6 +303,14 @@ def make_mesh_cycle_fn(mrt: MeshRuntime, *, loss_fn, opt, lr_scale=1.0,
     the optimized path) or "all_gather" (full-matrix baseline). Both are
     bit-for-bit equal to the oracle: they differ only in how the same
     source rows reach the shard.
+
+    metrics: `obs.MetricsSpec` — same contract as the flat runtime
+    (third `(R, K)` output, Python-level branching, `metrics=None`
+    traces the exact pre-obs program). Reductions here cross shards via
+    psum/all_gather, so metric VALUES may differ from the flat
+    runtime's by association order; the mesh appends one extra column,
+    `fabric_bytes` — the physical collective traffic per round (halo
+    rows or the all_gather matrix), which has no flat analogue.
     """
     if gossip_backend not in ("halo", "all_gather"):
         raise ValueError(f"unknown gossip backend {gossip_backend!r}")
@@ -322,6 +331,17 @@ def make_mesh_cycle_fn(mrt: MeshRuntime, *, loss_fn, opt, lr_scale=1.0,
     send_tbls = tuple(jnp.asarray(t) for t in mrt.halo.send_idx)
     perms = mrt.halo.perms
     counter = {"count": 0}
+    ms = metrics
+    if ms is not None:
+        from repro.fl.gossip import fabric_rows_per_round
+        from repro.obs import metrics as obsmet
+        e2 = int(mrt.rt.dst_sorted.shape[0])
+        e_per = mrt.edges_per_shard
+        row_bytes = float(spec.size * 4)
+        fabric_bytes = fabric_rows_per_round(
+            gossip_backend, halo_rows=mrt.halo.halo_rows,
+            num_shards=mrt.num_shards,
+            rows_padded=rows_padded) * row_bytes
 
     def flat_loss(w_row, batch):
         return loss_fn(flatmod.unravel(spec, w_row), batch)
@@ -331,9 +351,23 @@ def make_mesh_cycle_fn(mrt: MeshRuntime, *, loss_fn, opt, lr_scale=1.0,
         # per-shard rows of the (D, ·) index tables arrive as (1, ·)
         dst_l, src_g, gath = dst_l[0], src_g[0], gath[0]
         sends = tuple(s[0] for s in sends)
+        if ms is not None:
+            # pads never contribute: mask rows >= n and edges whose
+            # local dst is the `per` drop-sentinel before any reduction
+            shard = jax.lax.axis_index(axis)
+            row_mask = ((shard * per + jnp.arange(per)) < n
+                        ).astype(jnp.float32)[:, None]
+            edge_mask = (dst_l < per).astype(jnp.float32)
 
         def round_body(carry, xs):
-            w, os_, buf = carry
+            # same obs inertness contract as the flat runtime: the
+            # `ms is not None` branches are Python-level, so with
+            # metrics off this is the seed program op-for-op
+            if ms is None:
+                w, os_, buf = carry
+            else:
+                w, os_, buf, age = carry
+                w0 = w
             batch, strong_r, coeffs_r, diag_r = xs
 
             def local_step(c, batch_u):
@@ -341,9 +375,17 @@ def make_mesh_cycle_fn(mrt: MeshRuntime, *, loss_fn, opt, lr_scale=1.0,
                 loss, grads = jax.vmap(
                     jax.value_and_grad(flat_loss))(w, batch_u)
                 w, os_ = opt.update(w, grads, os_, lr_scale)
-                return (w, os_), loss
+                if ms is None or not ms.grad_norm:
+                    return (w, os_), loss
+                gsq_u = jnp.sum(jnp.square(grads.astype(jnp.float32))
+                                * row_mask)
+                return (w, os_), (loss, gsq_u)
 
-            (w, os_), losses = jax.lax.scan(local_step, (w, os_), batch)
+            (w, os_), ys = jax.lax.scan(local_step, (w, os_), batch)
+            if ms is None or not ms.grad_norm:
+                losses = ys
+            else:
+                losses, gsq_u = ys
 
             # cross-shard fetch of this shard's edge SOURCE rows, then
             # shard-local refresh + aggregation (pad edges dropped by
@@ -362,11 +404,41 @@ def make_mesh_cycle_fn(mrt: MeshRuntime, *, loss_fn, opt, lr_scale=1.0,
             # differently inside the two loop programs — a reporting
             # artifact, tolerated in tests (DESIGN.md §16).
             la = jax.lax.all_gather(losses, axis, axis=1, tiled=True)
-            return (w, os_, buf), jnp.mean(la[:, :n])
+            if ms is None:
+                return (w, os_, buf), jnp.mean(la[:, :n])
 
-        carry, losses = jax.lax.scan(round_body, (w, os_, buf),
-                                     (batches, strong, coeffs, diag))
-        return carry + (losses,)
+            vals = {}
+            if ms.grad_norm:
+                vals["gsq"] = jax.lax.psum(jnp.sum(gsq_u), axis)
+            if ms.param_norm:
+                vals["psq"] = jax.lax.psum(
+                    jnp.sum(jnp.square(w) * row_mask), axis)
+            if ms.update_norm:
+                vals["usq"] = jax.lax.psum(
+                    jnp.sum(jnp.square(w - w0) * row_mask), axis)
+            if ms.silo_loss:
+                vals["silo_loss"] = jnp.mean(la[:, :n], axis=0)
+            n_strong = jax.lax.psum(  # pads carry strong=False already
+                jnp.sum(strong_r.astype(jnp.float32)), axis)
+            age = jnp.where(strong_r, 0.0, age + 1.0)
+            if ms.staleness:
+                vals["stale_frac"] = 1.0 - n_strong / e2
+                vals["buf_age"] = jax.lax.psum(
+                    jnp.sum(age * edge_mask), axis) / e2
+            if ms.traffic:
+                vals["gossip_bytes"] = n_strong * row_bytes
+                vals["fabric_bytes"] = jnp.float32(fabric_bytes)
+            row = obsmet.assemble_row(ms, vals)
+            return (w, os_, buf, age), (jnp.mean(la[:, :n]), row)
+
+        carry = (w, os_, buf)
+        if ms is not None:
+            carry = carry + (jnp.zeros((e_per,), jnp.float32),)
+        carry, ys = jax.lax.scan(round_body, carry,
+                                 (batches, strong, coeffs, diag))
+        if ms is None:
+            return carry + (ys,)
+        return carry[:3] + ys
 
     def cycle(state, batches, strong, coeffs, diag):
         counter["count"] += 1
@@ -400,13 +472,19 @@ def make_mesh_cycle_fn(mrt: MeshRuntime, *, loss_fn, opt, lr_scale=1.0,
                     plan_specs["diag_rounds"],
                     table, table, table, *([table] * len(send_tbls)))
         out_specs = (row_spec, os_spec, row_spec, P())
+        if ms is not None:
+            out_specs = out_specs + (P(),)  # metrics replicated
         fn = smap(body, mesh, in_specs=in_specs, out_specs=out_specs,
                   check_rep=False)
-        w, os2, buf, losses = fn(state.w, state.opt_state, state.buffers,
-                                 batches_p, strong_p, coeffs_p, diag_p,
-                                 dst_local, src_global, gather_idx,
-                                 *send_tbls)
-        return FlatFLState(w, os2, buf), losses
+        out = fn(state.w, state.opt_state, state.buffers,
+                 batches_p, strong_p, coeffs_p, diag_p,
+                 dst_local, src_global, gather_idx,
+                 *send_tbls)
+        if ms is None:
+            w, os2, buf, losses = out
+            return FlatFLState(w, os2, buf), losses
+        w, os2, buf, losses, mets = out
+        return FlatFLState(w, os2, buf), losses, mets
 
     jitted = jax.jit(cycle, donate_argnums=(0,) if donate else ())
 
@@ -414,4 +492,6 @@ def make_mesh_cycle_fn(mrt: MeshRuntime, *, loss_fn, opt, lr_scale=1.0,
         return jitted(state, batches, strong, coeffs, diag)
 
     run.trace_count = counter
+    if ms is not None:
+        run.metric_columns = ms.columns(n, mesh=True)
     return run

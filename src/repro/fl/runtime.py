@@ -121,7 +121,8 @@ def init_flat_state(init_params: Callable[[jax.Array], Params], opt,
 def make_cycle_fn(rt: FlatRuntime, *, loss_fn, opt, lr_scale=1.0,
                   aggregator: str | None = None,
                   donate: bool | None = None,
-                  gossip: str | None = None):
+                  gossip: str | None = None,
+                  metrics=None):
     """Build the once-compiled whole-cycle step.
 
     Returns `cycle(state, batches, strong, coeffs, diag) ->
@@ -130,6 +131,14 @@ def make_cycle_fn(rt: FlatRuntime, *, loss_fn, opt, lr_scale=1.0,
     order. R is whatever slice of the cycle the caller passes — the jit
     specializes per R and the attached `cycle.trace_count["count"]`
     records how often tracing actually ran (the whole point: once).
+
+    metrics: an `obs.MetricsSpec` adds a third output — an `(R, K)`
+    f32 matrix of per-round scalars (column names on the returned
+    function's `metric_columns`) accumulated inside the same scan, so
+    the cycle is still ONE dispatch. `metrics=None` (default) branches
+    at Python level only and traces the EXACT pre-obs program: state
+    stays bit-identical and `trace_count` semantics are untouched
+    (DESIGN.md §17, tests/test_obs.py).
 
     Passing a `fl/mesh.py` MeshRuntime instead builds the SHARDED twin
     of this function (same external contract, shard_map program inside;
@@ -151,7 +160,8 @@ def make_cycle_fn(rt: FlatRuntime, *, loss_fn, opt, lr_scale=1.0,
                              "single-device only")
         return flmesh.make_mesh_cycle_fn(
             rt, loss_fn=loss_fn, opt=opt, lr_scale=lr_scale,
-            gossip_backend=gossip or "halo", donate=donate)
+            gossip_backend=gossip or "halo", donate=donate,
+            metrics=metrics)
     if gossip is not None:
         raise ValueError("gossip= selects the MESH runtime's cross-shard "
                          "backend; pass a MeshRuntime to use it")
@@ -172,21 +182,40 @@ def make_cycle_fn(rt: FlatRuntime, *, loss_fn, opt, lr_scale=1.0,
     dst_sorted = jnp.asarray(rt.dst_sorted)
     src_sorted = jnp.asarray(rt.src_sorted)
     counter = {"count": 0}
+    ms = metrics
+    if ms is not None:
+        from repro.obs import metrics as obsmet
+        e2 = int(rt.dst_sorted.shape[0])
+        row_bytes = float(spec.size * 4)  # fp32 flat rows
 
     def flat_loss(w_row, batch):
         return loss_fn(flatmod.unravel(spec, w_row), batch)
 
     def round_body(carry, xs):
-        w, os_, buf = carry
+        # obs inertness contract: every `ms is not None` branch below
+        # is resolved at TRACE time — with metrics off this body emits
+        # the seed runtime's jaxpr op-for-op (tests/test_obs.py).
+        if ms is None:
+            w, os_, buf = carry
+        else:
+            w, os_, buf, age = carry
+            w0 = w
         batches, strong_r, coeffs_r, diag_r = xs
 
         def local_step(c, batch_u):
             w, os_ = c
             loss, grads = jax.vmap(jax.value_and_grad(flat_loss))(w, batch_u)
             w, os_ = opt.update(w, grads, os_, lr_scale)
-            return (w, os_), loss
+            if ms is None or not ms.grad_norm:
+                return (w, os_), loss
+            gsq_u = jnp.sum(jnp.square(grads.astype(jnp.float32)))
+            return (w, os_), (loss, gsq_u)
 
-        (w, os_), losses = jax.lax.scan(local_step, (w, os_), batches)
+        (w, os_), ys = jax.lax.scan(local_step, (w, os_), batches)
+        if ms is None or not ms.grad_norm:
+            losses = ys
+        else:
+            losses, gsq_u = ys
 
         # buffer refresh on strong edges (fresh w_src), else keep stale
         buf = jnp.where(strong_r[:, None], w[src_sorted], buf)
@@ -200,14 +229,42 @@ def make_cycle_fn(rt: FlatRuntime, *, loss_fn, opt, lr_scale=1.0,
                                      diag_r)
         else:
             w = edge_aggregate_ref(w, buf, coeffs_r, dst_sorted, diag_r)
-        return (w, os_, buf), jnp.mean(losses)
+        if ms is None:
+            return (w, os_, buf), jnp.mean(losses)
+
+        vals = {}
+        if ms.grad_norm:
+            vals["gsq"] = jnp.sum(gsq_u)
+        if ms.param_norm:
+            vals["psq"] = jnp.sum(jnp.square(w))
+        if ms.update_norm:
+            vals["usq"] = jnp.sum(jnp.square(w - w0))
+        if ms.silo_loss:
+            vals["silo_loss"] = jnp.mean(losses, axis=0)
+        n_strong = jnp.sum(strong_r.astype(jnp.float32))
+        age = jnp.where(strong_r, 0.0, age + 1.0)
+        if ms.staleness:
+            vals["stale_frac"] = 1.0 - n_strong / e2
+            vals["buf_age"] = jnp.mean(age)
+        if ms.traffic:
+            vals["gossip_bytes"] = n_strong * row_bytes
+        row = obsmet.assemble_row(ms, vals)
+        return (w, os_, buf, age), (jnp.mean(losses), row)
 
     def cycle(state, batches, strong, coeffs, diag):
         counter["count"] += 1
         carry = (state.w, state.opt_state, state.buffers)
-        (w, os_, buf), losses = jax.lax.scan(
+        if ms is not None:
+            # buffer age restarts each cycle call (documented: ages are
+            # "rounds since refresh, within this dispatch")
+            carry = carry + (jnp.zeros((e2,), jnp.float32),)
+        out, ys = jax.lax.scan(
             round_body, carry, (batches, strong, coeffs, diag))
-        return FlatFLState(w, os_, buf), losses
+        w, os_, buf = out[:3]
+        if ms is None:
+            return FlatFLState(w, os_, buf), ys
+        losses, mets = ys
+        return FlatFLState(w, os_, buf), losses, mets
 
     jitted = jax.jit(cycle, donate_argnums=(0,) if donate else ())
 
@@ -215,6 +272,8 @@ def make_cycle_fn(rt: FlatRuntime, *, loss_fn, opt, lr_scale=1.0,
         return jitted(state, batches, strong, coeffs, diag)
 
     run.trace_count = counter
+    if ms is not None:
+        run.metric_columns = ms.columns(rt.num_silos)
     return run
 
 

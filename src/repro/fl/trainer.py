@@ -20,6 +20,7 @@ Two runtimes share one code path (`FLConfig.runtime`):
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 
@@ -74,6 +75,14 @@ class FLConfig:
     # Christofides overlay pairs (the design search's exchange format);
     # None = Algorithm 1's assignment at `t`.
     multiplicity: tuple[int, ...] | None = None
+    # Observability (DESIGN.md §17), flat runtime only. `metrics`: an
+    # `obs.MetricsSpec` — the jitted cycle additionally returns per-
+    # round in-scan scalars, surfaced on FLResult.metrics. `trace`: a
+    # path — write a Perfetto trace-event JSON of the run (simulated
+    # per-silo spans + host compile/dispatch/eval spans + metric
+    # counters). Both default off and are provably inert when off.
+    metrics: object = None
+    trace: str | None = None
 
 
 @dataclasses.dataclass
@@ -85,6 +94,9 @@ class FLResult:
     cycle_times_ms: list[float]
     mean_cycle_ms: float
     total_time_s: float
+    # populated only when cfg.metrics is set
+    metrics: np.ndarray | None = None        # (rounds, K) f32
+    metric_columns: tuple[str, ...] = ()
 
     def final_acc(self) -> float:
         return self.eval_accs[-1] if self.eval_accs else float("nan")
@@ -146,6 +158,18 @@ def run_fl(cfg: FLConfig) -> FLResult:
     r_cycle = plan.num_rounds_cycle
     round_losses, eval_rounds, eval_accs = [], [], []
 
+    if (cfg.metrics is not None or cfg.trace) and cfg.runtime != "flat":
+        raise ValueError("metrics=/trace= need the flat whole-cycle "
+                         "runtime (the legacy path has no in-scan hook)")
+    recorder = None
+    if cfg.trace:
+        from repro.obs import TraceRecorder
+        recorder = TraceRecorder()
+        recorder.meta.update(dataset=cfg.dataset, network=cfg.network,
+                             topology=cfg.topology, rounds=cfg.rounds,
+                             seed=cfg.seed)
+    metrics_chunks: list[np.ndarray] = []
+
     if cfg.runtime == "flat":
         from repro.fl import flat as flatmod
         from repro.fl import runtime as flrt
@@ -159,14 +183,16 @@ def run_fl(cfg: FLConfig) -> FLResult:
                 rt, None if cfg.mesh == "auto" else cfg.mesh)
             state = flmesh.init_mesh_state(spec.init, opt, rt, key)
             cycle_fn = flrt.make_cycle_fn(rt, loss_fn=loss_fn, opt=opt,
-                                          gossip=cfg.gossip)
+                                          gossip=cfg.gossip,
+                                          metrics=cfg.metrics)
             # eval through the SAME single-device jit as mesh=None:
             # silo rows are bit-identical, so accuracies are too
             get_w = lambda st: jnp.asarray(
                 np.asarray(jax.device_get(st.w))[:n])
         else:
             state = flrt.init_flat_state(spec.init, opt, rt, key)
-            cycle_fn = flrt.make_cycle_fn(rt, loss_fn=loss_fn, opt=opt)
+            cycle_fn = flrt.make_cycle_fn(rt, loss_fn=loss_fn, opt=opt,
+                                          metrics=cfg.metrics)
             get_w = lambda st: st.w
         eval_params_fn = jax.jit(
             lambda w: flatmod.unravel(rt.spec, jnp.mean(w, axis=0)))
@@ -183,14 +209,32 @@ def run_fl(cfg: FLConfig) -> FLResult:
             batches = {"x": jnp.asarray(np.stack([x for x, _ in per_round])),
                        "y": jnp.asarray(np.stack([y for _, y in per_round]))}
             pks = [(k + j) % r_cycle for j in range(chunk)]
-            state, losses = cycle_fn(state, batches,
-                                     jnp.asarray(rt.strong[pks]),
-                                     jnp.asarray(rt.coeffs[pks]),
-                                     jnp.asarray(rt.diag[pks]))
-            round_losses.extend(float(x) for x in np.asarray(losses))
+            if recorder is not None:
+                span = recorder.host_span(
+                    "compile+dispatch" if k == 0 else "dispatch",
+                    start_round=k, rounds=chunk)
+            else:
+                span = contextlib.nullcontext()
+            with span:
+                out = cycle_fn(state, batches,
+                               jnp.asarray(rt.strong[pks]),
+                               jnp.asarray(rt.coeffs[pks]),
+                               jnp.asarray(rt.diag[pks]))
+                if cfg.metrics is not None:
+                    state, losses, mets = out
+                    metrics_chunks.append(np.asarray(mets))
+                else:
+                    state, losses = out
+                losses = np.asarray(losses)
+            round_losses.extend(float(x) for x in losses)
             k += chunk
             if k % cfg.eval_every == 0 or k == cfg.rounds:
-                acc = float(acc_fn(eval_params_fn(get_w(state))))
+                if recorder is not None:
+                    span = recorder.host_span("eval", round=k)
+                else:
+                    span = contextlib.nullcontext()
+                with span:
+                    acc = float(acc_fn(eval_params_fn(get_w(state))))
                 eval_rounds.append(k)
                 eval_accs.append(acc)
     elif cfg.runtime == "legacy":
@@ -229,8 +273,20 @@ def run_fl(cfg: FLConfig) -> FLResult:
     # drifted apart for rounds > 512).
     cycle = tplan.cycle_times(cfg.rounds)
     rep = tplan.report(cfg.rounds)
+    all_metrics = (np.concatenate(metrics_chunks)
+                   if metrics_chunks else None)
+    metric_cols = (getattr(cycle_fn, "metric_columns", ())
+                   if cfg.metrics is not None else ())
+    if recorder is not None:
+        from repro.obs import write_trace
+        recorder.add_sim_spans(tplan, cfg.rounds)
+        if all_metrics is not None:
+            starts = np.concatenate([[0.0], np.cumsum(cycle)[:-1]])
+            recorder.add_metrics(all_metrics, metric_cols, starts)
+        write_trace(cfg.trace, recorder)
     return FLResult(config=cfg, round_losses=round_losses,
                     eval_rounds=eval_rounds, eval_accs=eval_accs,
                     cycle_times_ms=cycle.tolist(),
                     mean_cycle_ms=rep.mean_cycle_ms,
-                    total_time_s=rep.total_time_s)
+                    total_time_s=rep.total_time_s,
+                    metrics=all_metrics, metric_columns=tuple(metric_cols))

@@ -42,6 +42,16 @@ from repro.optim import adamw  # noqa: E402
 FL_SILOS = 2  # multi-pod: one silo per pod
 
 
+def cost_dict(compiled) -> dict:
+    """Normalize `Compiled.cost_analysis()` across jax versions: older
+    releases return one dict, 0.4.3x returns a one-element list of
+    dicts (one per partition), newer may return None."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 def _opt_specs(pspec_tree):
     return {"step": P(),
             "m": jax.tree.map(lambda s: s, pspec_tree,
@@ -157,7 +167,7 @@ def lower_pair(arch: str, shape_name: str, mesh, *, multi_pod: bool,
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
-        ca = compiled.cost_analysis() or {}
+        ca = cost_dict(compiled)
         text = compiled.as_text()
         coll = hlo_analysis.collective_stats(text)
         report.update(

@@ -22,6 +22,7 @@ Usage:
 from __future__ import annotations
 
 import argparse
+import contextlib
 import dataclasses
 import json
 import time
@@ -68,6 +69,10 @@ class TrainConfig:
     # base (fl/lora.py) so per-silo state is T_lora, not T_full.
     lora_rank: int = 0
     gossip: str = "halo"
+    # Write a Perfetto trace-event JSON of the run (obs/, DESIGN.md
+    # §17): simulated per-silo timeline from the schedule's TimingPlan
+    # + host wall-clock spans around each compile/dispatch. None = off.
+    trace: str | None = None
 
 
 def run_reduced_fl(cfg: TrainConfig) -> dict:
@@ -76,8 +81,15 @@ def run_reduced_fl(cfg: TrainConfig) -> dict:
     n = net.num_silos
     wl = WORKLOADS["femnist"]
 
-    plan, _ = dpasgd.make_round_schedule(cfg.topology, net, wl, t=cfg.t,
-                                         rounds=cfg.rounds, seed=cfg.seed)
+    plan, tplan = dpasgd.make_round_schedule(cfg.topology, net, wl, t=cfg.t,
+                                             rounds=cfg.rounds, seed=cfg.seed)
+    recorder = None
+    if cfg.trace:
+        from repro.obs import TraceRecorder
+        recorder = TraceRecorder()
+        recorder.meta.update(arch=cfg.arch, topology=cfg.topology,
+                             network=net.name, rounds=cfg.rounds,
+                             seed=cfg.seed)
     key = jax.random.PRNGKey(cfg.seed)
     data = make_lm_dataset(mcfg.vocab_size, cfg.seq_len, n,
                            samples_per_silo=64, seed=cfg.seed)
@@ -136,11 +148,17 @@ def run_reduced_fl(cfg: TrainConfig) -> dict:
                 batches["prefix_embeds"] = jnp.broadcast_to(
                     prefix[None], (chunk,) + prefix.shape)
             pks = [(k + j) % r_cycle for j in range(chunk)]
-            state, chunk_losses = cycle(state, batches,
-                                        jnp.asarray(rt.strong[pks]),
-                                        jnp.asarray(rt.coeffs[pks]),
-                                        jnp.asarray(rt.diag[pks]))
-            losses.extend(float(x) for x in np.asarray(chunk_losses))
+            span = (recorder.host_span(
+                        "compile+dispatch" if k == 0 else "dispatch",
+                        start_round=k, rounds=chunk)
+                    if recorder is not None else contextlib.nullcontext())
+            with span:
+                state, chunk_losses = cycle(state, batches,
+                                            jnp.asarray(rt.strong[pks]),
+                                            jnp.asarray(rt.coeffs[pks]),
+                                            jnp.asarray(rt.diag[pks]))
+                chunk_losses = np.asarray(chunk_losses)
+            losses.extend(float(x) for x in chunk_losses)
             k += chunk
         # bytes a silo actually communicates per round: the flat row
         # (the LoRA delta when lora_rank > 0, not the frozen base)
@@ -162,11 +180,17 @@ def run_reduced_fl(cfg: TrainConfig) -> dict:
             if prefix is not None:
                 batches["prefix_embeds"] = prefix
             pk = k % r_cycle
-            state, loss = step(state, batches,
-                               jnp.asarray(plan.strong[pk]),
-                               jnp.asarray(plan.coeffs[pk]),
-                               jnp.asarray(plan.diag[pk]))
-            losses.append(float(loss))
+            span = (recorder.host_span(
+                        "compile+dispatch" if k == 0 else "dispatch",
+                        start_round=k, rounds=1)
+                    if recorder is not None else contextlib.nullcontext())
+            with span:
+                state, loss = step(state, batches,
+                                   jnp.asarray(plan.strong[pk]),
+                                   jnp.asarray(plan.coeffs[pk]),
+                                   jnp.asarray(plan.diag[pk]))
+                loss = float(loss)
+            losses.append(loss)
         param_bytes = sum(x.size * x.dtype.itemsize
                           for x in jax.tree.leaves(state.silo_params)) / n
 
@@ -178,7 +202,7 @@ def run_reduced_fl(cfg: TrainConfig) -> dict:
                    else "multigraph", net, wl_model,
                    num_rounds=cfg.rounds, **(
                        {"t": cfg.t} if cfg.topology == "multigraph" else {}))
-    return {
+    out = {
         "arch": cfg.arch, "topology": cfg.topology, "silos": n,
         "loss_first": losses[0], "loss_last": losses[-1],
         "losses": losses,
@@ -186,6 +210,12 @@ def run_reduced_fl(cfg: TrainConfig) -> dict:
         "sim_mean_cycle_ms": sim.mean_cycle_ms,
         "sim_total_time_s": sim.total_time_s,
     }
+    if recorder is not None:
+        from repro.obs import write_trace
+        recorder.add_sim_spans(tplan, cfg.rounds)
+        write_trace(cfg.trace, recorder)
+        out["trace"] = cfg.trace
+    return out
 
 
 def main():
@@ -203,6 +233,9 @@ def main():
                     help="silo shards: an int, 'auto', or unset for the "
                          "legacy per-round runtime")
     ap.add_argument("--lora-rank", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write a Perfetto trace-event JSON of the run "
+                         "(open at ui.perfetto.dev)")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--set", dest="overrides", action="append", default=[],
                     metavar="KEY=VALUE",
@@ -217,7 +250,7 @@ def main():
         arch=args.arch, topology=args.topology, network=args.network,
         silos=args.silos, rounds=args.rounds, t=args.t,
         seq_len=args.seq_len, batch_size=args.batch_size, lr=args.lr,
-        mesh=mesh, lora_rank=args.lora_rank)
+        mesh=mesh, lora_rank=args.lora_rank, trace=args.trace)
     out = run_reduced_fl(apply_overrides(cfg, args.overrides))
     out.pop("losses")
     print(json.dumps(out, indent=1))

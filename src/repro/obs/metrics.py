@@ -1,0 +1,115 @@
+"""In-scan metrics spec for the whole-cycle FL runtimes.
+
+A `MetricsSpec` names per-round device-side scalars that the jitted
+cycle accumulates INSIDE its `lax.scan` — the scan stacks one `(K,)`
+f32 row per round into the cycle's extra `(R, K)` output. There are no
+host callbacks, no `debug.print`, no per-round dispatches: the hot
+path stays one dispatch per cycle, metrics ride the existing scan.
+
+The inertness contract (DESIGN.md §17): `metrics=None` must make
+`make_cycle_fn` trace the EXACT current program. The runtimes
+guarantee that by branching on the spec at Python level only — with
+the spec absent, no op, carry leaf, or output is added, so the jaxpr
+is identical to the seed runtime's and state stays bit-for-bit equal.
+
+Column layout is canonical and shared between the flat and mesh
+runtimes (`metric_columns` / `assemble_row`); the mesh runtime
+additionally appends a `fabric_bytes` column (physical collective
+traffic — halo or all_gather rows — which has no flat analogue).
+Flat vs mesh VALUES need not be bitwise equal: reductions cross shard
+boundaries via psum/all_gather in a different association order than
+the single-device sum. State bit-exactness is unaffected — metrics
+are read-only taps off the carry.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricsSpec:
+    """Which per-round scalars the cycle should record.
+
+    grad_norm    — global l2 norm of the round's local-step gradients
+                   (sum of squares over every local update and silo).
+    param_norm   — global l2 norm of the post-aggregation params.
+    update_norm  — l2 norm of (w_end - w_start) for the round.
+    silo_loss    — per-silo mean local loss: N columns `loss/silo{i}`.
+    staleness    — `stale_frac` (1 - strong-edge fraction this round)
+                   and `buf_age` (mean rounds since each directed edge
+                   buffer was refreshed, counted from cycle start).
+    traffic      — `gossip_bytes`: semantic refresh traffic, i.e.
+                   strong-edge count x flat row bytes. Mesh adds
+                   `fabric_bytes` (physical collective bytes/round).
+    """
+
+    grad_norm: bool = True
+    param_norm: bool = True
+    update_norm: bool = True
+    silo_loss: bool = True
+    staleness: bool = True
+    traffic: bool = True
+
+    def __post_init__(self):
+        if not (self.grad_norm or self.param_norm or self.update_norm
+                or self.silo_loss or self.staleness or self.traffic):
+            raise ValueError("MetricsSpec with every metric disabled "
+                             "records nothing; pass metrics=None instead")
+
+    def columns(self, num_silos: int, *, mesh: bool = False) -> tuple[str, ...]:
+        return metric_columns(self, num_silos, mesh=mesh)
+
+    @property
+    def any_norm(self) -> bool:
+        return self.grad_norm or self.param_norm or self.update_norm
+
+
+def metric_columns(ms: MetricsSpec, num_silos: int, *,
+                   mesh: bool = False) -> tuple[str, ...]:
+    """Canonical column order of the `(R, K)` metrics output."""
+    cols: list[str] = []
+    if ms.grad_norm:
+        cols.append("grad_norm")
+    if ms.param_norm:
+        cols.append("param_norm")
+    if ms.update_norm:
+        cols.append("update_norm")
+    if ms.silo_loss:
+        cols.extend(f"loss/silo{i}" for i in range(num_silos))
+    if ms.staleness:
+        cols.extend(("stale_frac", "buf_age"))
+    if ms.traffic:
+        cols.append("gossip_bytes")
+        if mesh:
+            cols.append("fabric_bytes")
+    return tuple(cols)
+
+
+def assemble_row(ms: MetricsSpec, vals: dict) -> jnp.ndarray:
+    """Order computed device values into the canonical `(K,)` f32 row.
+
+    `vals` carries GLOBAL reductions (the mesh body psums before
+    calling this): `gsq`/`psq`/`usq` sums of squares (sqrt applied
+    here), `silo_loss (N,)`, `stale_frac`, `buf_age`, `gossip_bytes`,
+    and optionally `fabric_bytes`.
+    """
+    parts = []
+    if ms.grad_norm:
+        parts.append(jnp.sqrt(vals["gsq"])[None])
+    if ms.param_norm:
+        parts.append(jnp.sqrt(vals["psq"])[None])
+    if ms.update_norm:
+        parts.append(jnp.sqrt(vals["usq"])[None])
+    if ms.silo_loss:
+        parts.append(vals["silo_loss"])
+    if ms.staleness:
+        parts.append(vals["stale_frac"][None])
+        parts.append(vals["buf_age"][None])
+    if ms.traffic:
+        parts.append(vals["gossip_bytes"][None])
+        if "fabric_bytes" in vals:
+            parts.append(vals["fabric_bytes"][None])
+    return jnp.concatenate([jnp.asarray(p, jnp.float32) for p in parts])

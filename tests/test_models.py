@@ -134,7 +134,7 @@ def test_sliding_window_decode_matches_prefill():
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.xfail(strict=False, reason="pre-existing environment numerics in this container (fails at the seed commit; see .claude/skills/verify/SKILL.md)")
+@pytest.mark.xfail(strict=False, reason="genuine numerics in this container: gather path ~1.1% relative off the dense oracle (fails at the seed commit; audited in DESIGN.md §17)")
 def test_moe_gather_matches_dense():
     cfg = reduce(get_config("granite_moe_1b"))
     p = moe_mod.moe_init(KEY, cfg, jnp.float32)
