@@ -51,9 +51,9 @@ def main() -> None:
 
     from benchmarks import (ablation_noniid, faults_bench, fig5_convergence,
                             kernel_bench, obs_bench, population_bench,
-                            sim_bench, table1_cycle_time, table3_isolated,
-                            table4_removal, table5_accuracy,
-                            table6_tradeoff, tta_bench)
+                            serving_bench, sim_bench, table1_cycle_time,
+                            table3_isolated, table4_removal,
+                            table5_accuracy, table6_tradeoff, tta_bench)
 
     suites = {
         "table1": lambda: table1_cycle_time.run(quick=args.quick),
@@ -85,6 +85,9 @@ def main() -> None:
         # observability overhead gate: metrics-on vs off dispatch ratio
         # + the trace artifact CI uploads (merges obs/ rows):
         "obs": lambda: obs_bench.run(quick=args.quick),
+        # train->checkpoint->deploy->serve loop: offered-load sweep
+        # over the regional fleet (writes BENCH_serving.json):
+        "serving": lambda: serving_bench.run(quick=args.quick),
         "roofline": _roofline_rows,
         # beyond-paper ablation; opt-in (adds ~10 min):
         #   python -m benchmarks.run --only noniid

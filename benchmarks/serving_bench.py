@@ -1,0 +1,64 @@
+"""Serving-loop benchmark: offered-load sweep over a regional fleet.
+
+Runs the full train -> checkpoint -> deploy -> serve loop on a CI-sized
+budget (a reduced LM federally trained over gaia's silos with the
+FEMNIST timing workload, checkpointed, deployed as one ServingEngine
+replica per continent, then swept under open-loop Poisson traffic —
+serving/fleet.py + serving/traffic.py) and writes one row per load
+point into BENCH_serving.json (merge protocol + ``ts`` stamps, same as
+obs_bench; the file passes `python -m repro.obs validate --bench`).
+
+Hard invariants asserted every run:
+
+* every arrival completes (open-loop drain finishes);
+* >= 3 load points and p99 end-to-end latency monotone non-decreasing
+  in offered load — guaranteed by construction (nested counter-RNG
+  arrival traces + FIFO work-conserving engines), so a violation means
+  the generator or the slot engine regressed;
+* the sweep replays deterministically (same seed -> same records).
+"""
+
+from __future__ import annotations
+
+LOADS = (20.0, 60.0, 120.0)
+
+
+def run(quick: bool = False):
+    import tempfile
+
+    from repro.launch.train import TrainConfig, run_reduced_fl
+    from repro.serving.fleet import RegionalFleet
+    from repro.serving.traffic import (TrafficConfig, bench_rows,
+                                       sweep_loads, write_bench_json)
+
+    ckpt_dir = tempfile.mkdtemp(prefix="serving_bench_")
+    rounds = 3 if quick else 6
+    run_reduced_fl(TrainConfig(
+        arch="mamba2-370m", network="gaia", silos=6, rounds=rounds,
+        t=2, ckpt_dir=ckpt_dir))
+    fleet = RegionalFleet.from_checkpoint(ckpt_dir, max_slots=4,
+                                          max_seq=64)
+    cfg = TrafficConfig(seed=0,
+                        duration_ms=400.0 if quick else 1_000.0,
+                        step_ms=10.0)
+    results = sweep_loads(fleet, cfg, LOADS)
+
+    for r in results:
+        assert r.summary["completed"] == r.summary["arrived"], \
+            f"load {r.load}: drain lost requests"
+    p99 = [r.summary["p99_ms"] for r in results]
+    assert len(p99) >= 3 and all(a <= b for a, b in zip(p99, p99[1:])), \
+        f"p99 not monotone in offered load: {p99}"
+    replay = sweep_loads(fleet, cfg, LOADS[:1])[0]
+    assert [(q.t_gen, q.site, q.t_done) for q in replay.requests] == \
+        [(q.t_gen, q.site, q.t_done) for q in results[0].requests], \
+        "sweep is not deterministic under replay"
+
+    rows = bench_rows(results, fleet)
+    write_bench_json(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -16,7 +16,7 @@ import time
 from repro.core import sweep as sweepmod
 from repro.core.delay import WORKLOADS
 from repro.core.simulator import simulate
-from repro.networks.zoo import NETWORKS, get_network
+from repro.networks.registry import get_network, list_networks
 
 TOPOLOGIES = ["star", "matcha", "matcha_plus", "mst", "dmbst", "ring",
               "multigraph"]
@@ -38,7 +38,7 @@ PAPER_RING_REDUCTION = {
 def run(num_rounds: int = 6400, quick: bool = False):
     """Yields CSV rows: name,us_per_call,derived."""
     workloads = ["femnist"] if quick else list(WORKLOADS)
-    networks = ["gaia", "geant"] if quick else list(NETWORKS)
+    networks = ["gaia", "geant"] if quick else list_networks()
     cfg = sweepmod.SweepConfig(topologies=tuple(TOPOLOGIES),
                                networks=tuple(networks),
                                workloads=tuple(workloads),

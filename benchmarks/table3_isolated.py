@@ -9,7 +9,7 @@ import time
 
 from repro.core.delay import FEMNIST
 from repro.core.simulator import simulate, simulate_multigraph
-from repro.networks.zoo import NETWORKS, get_network
+from repro.networks.registry import get_network, list_networks
 
 # paper Table 3: (total silos, rounds w/ iso, states w/ iso, cycle ms)
 PAPER = {
@@ -22,7 +22,7 @@ PAPER = {
 
 
 def run(num_rounds: int = 6400, quick: bool = False):
-    networks = ["gaia", "geant"] if quick else list(NETWORKS)
+    networks = ["gaia", "geant"] if quick else list_networks()
     rows = []
     for name in networks:
         net = get_network(name)

@@ -68,6 +68,30 @@ def main():
     print(f"\ntrace: {len(rec.sim_events)} spans over {end_ms:.1f} ms "
           "simulated -> /tmp/quickstart_trace.json")
 
+    # 7. close the loop: train -> checkpoint -> serve (DESIGN.md §18).
+    # Federally train a reduced LM over gaia's silos (FEMNIST is the
+    # timing workload), checkpoint the per-silo rows, deploy one
+    # serving replica per continent (each region serves the mean of
+    # ITS silos' rows), and push open-loop traffic through the fleet.
+    # `python -m repro.serving` is the CLI twin with a load sweep,
+    # BENCH output, and a Perfetto serving timeline.
+    import tempfile
+
+    from repro.launch.train import TrainConfig, run_reduced_fl
+    from repro.serving import RegionalFleet, TrafficConfig, simulate as serve
+    ckpt_dir = tempfile.mkdtemp(prefix="quickstart_ckpt_")
+    run_reduced_fl(TrainConfig(arch="mamba2-370m", network="gaia",
+                               silos=6, rounds=3, t=2, seq_len=16,
+                               batch_size=2, ckpt_dir=ckpt_dir))
+    fleet = RegionalFleet.from_checkpoint(ckpt_dir, max_slots=4,
+                                          max_seq=64)
+    res = serve(fleet, TrafficConfig(duration_ms=400.0), load=60.0)
+    s = res.summary
+    print(f"\nserving: regions={list(fleet.regions)} "
+          f"completed={s['completed']}/{s['arrived']} "
+          f"p50={s['p50_ms']:.0f}ms p99={s['p99_ms']:.0f}ms "
+          f"tokens/s={s['tokens_per_s']:.0f}")
+
 
 if __name__ == "__main__":
     main()

@@ -9,7 +9,7 @@ import sys
 
 from repro.core.delay import FEMNIST
 from repro.core.simulator import simulate
-from repro.networks.zoo import NETWORKS
+from repro.networks.registry import get_network, list_networks
 
 
 def main():
@@ -18,8 +18,7 @@ def main():
              "multigraph"]
     print(f"mean cycle time (ms) over {rounds} rounds, FEMNIST workload\n")
     print(f"{'network':10s}" + "".join(f"{t:>13s}" for t in topos))
-    for name in NETWORKS:
-        from repro.networks.zoo import get_network
+    for name in list_networks():
         net = get_network(name)
         row = [f"{name:10s}"]
         for topo in topos:
@@ -27,8 +26,7 @@ def main():
             row.append(f"{rep.mean_cycle_ms:13.1f}")
         print("".join(row))
     print("\nours vs RING speedup:")
-    for name in NETWORKS:
-        from repro.networks.zoo import get_network
+    for name in list_networks():
         net = get_network(name)
         ours = simulate("multigraph", net, FEMNIST, num_rounds=rounds)
         ring = simulate("ring", net, FEMNIST, num_rounds=rounds)

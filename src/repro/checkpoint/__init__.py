@@ -1,5 +1,8 @@
-from repro.checkpoint.ckpt import (latest_step, restore_pytree, save_pytree,
-                                   CheckpointManager)
+from repro.checkpoint.ckpt import (CheckpointManager, FLCheckpoint,
+                                   latest_step, load_fl_checkpoint,
+                                   restore_pytree, save_fl_checkpoint,
+                                   save_pytree)
 
 __all__ = ["save_pytree", "restore_pytree", "latest_step",
-           "CheckpointManager"]
+           "CheckpointManager", "FLCheckpoint", "save_fl_checkpoint",
+           "load_fl_checkpoint"]

@@ -7,6 +7,7 @@ step-numbered directories, and a small manager with retention.
 
 from __future__ import annotations
 
+import dataclasses
 import os
 import pathlib
 import re
@@ -141,3 +142,83 @@ class CheckpointManager:
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
         return step, restore_pytree(self.path(step))
+
+    def steps(self) -> list[int]:
+        """All retained step numbers, ascending."""
+        if not self.dir.exists():
+            return []
+        return sorted(int(m.group(1)) for p in self.dir.iterdir()
+                      if (m := _STEP_RE.match(p.name)))
+
+
+# ---------------------------------------------------------------------------
+# FL checkpoints: per-silo flat rows + run metadata.
+#
+# The exchange format between training (fl/trainer.py, launch/train.py)
+# and the regional serving fleet (serving/fleet.py): the `(N, T)` flat
+# parameter block in the single-device dst-sorted layout — a mesh-
+# sharded run MUST gather through `fl.mesh.gather_flat_state` before
+# saving, which is what makes a D=8 checkpoint bit-identical to the
+# D=1 one (tests/test_serving_loop.py) — plus everything a consumer
+# needs to rebuild the model around the rows: network / topology /
+# multiplicity provenance, the training round and its simulated wall-
+# clock, and a short metrics tail for staleness/debug display.
+# ---------------------------------------------------------------------------
+
+_FL_KIND = "fl_flat_rows"
+
+
+@dataclasses.dataclass(frozen=True)
+class FLCheckpoint:
+    """One restored FL checkpoint."""
+
+    step: int
+    w: np.ndarray        # (N, T) f32 per-silo flat parameter rows
+    meta: dict
+
+    @property
+    def num_silos(self) -> int:
+        return int(self.w.shape[0])
+
+
+def save_fl_checkpoint(manager: CheckpointManager, step: int, w,
+                       **meta) -> None:
+    """Save per-silo flat rows + metadata as step ``step``.
+
+    ``w`` must already be the gathered `(N, T)` block (no mesh padding
+    rows); metadata values must be msgpack-encodable scalars, strings,
+    lists, or arrays.
+    """
+    w = np.asarray(jax.device_get(w))
+    if w.ndim != 2:
+        raise ValueError(f"w must be (N, T) flat rows, got {w.shape}")
+    meta = dict(meta, round=int(meta.get("round", step)))
+    manager.save(step, {"kind": _FL_KIND, "w": w,
+                        "meta": _encode_meta(meta)})
+
+
+def load_fl_checkpoint(src, step: int | None = None) -> FLCheckpoint:
+    """Restore an `FLCheckpoint` from a `CheckpointManager` or dir."""
+    manager = src if isinstance(src, CheckpointManager) \
+        else CheckpointManager(src)
+    step, tree = manager.restore(step)
+    if not isinstance(tree, dict) or tree.get("kind") != _FL_KIND:
+        raise ValueError(f"step {step} in {manager.dir} is not an FL "
+                         f"checkpoint (kind={tree.get('kind')!r})")
+    w = np.asarray(tree["w"])
+    return FLCheckpoint(step=int(step), w=w, meta=dict(tree["meta"]))
+
+
+def _encode_meta(meta: dict) -> dict:
+    """Round-trippable metadata: tuples -> lists, arrays pass through."""
+    def enc(v):
+        if isinstance(v, tuple):
+            return [enc(x) for x in v]
+        if isinstance(v, dict):
+            return {k: enc(x) for k, x in v.items()}
+        if isinstance(v, (np.integer,)):
+            return int(v)
+        if isinstance(v, (np.floating,)):
+            return float(v)
+        return v
+    return {k: enc(v) for k, v in meta.items()}

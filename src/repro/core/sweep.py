@@ -42,7 +42,7 @@ from repro.core.delay import WORKLOADS
 from repro.core.timing import CycleTimeReport
 from repro.core.topology import ring_topology
 from repro.design import batched as design_batched
-from repro.networks.zoo import NETWORKS, get_network
+from repro.networks.registry import get_network
 
 PAPER_TOPOLOGIES = ("star", "matcha", "matcha_plus", "mst", "dmbst",
                     "ring", "multigraph")

@@ -36,6 +36,7 @@ from repro.design.search import (evolve_population, hill_climb,
                                  make_scorer, strong_fraction)
 from repro.faults import (DegradePolicy, FaultedSession, Scenario,
                           get_scenario)
+from repro.fl.options import RuntimeOptions, adopt_runtime_options
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,15 +72,23 @@ class ControllerConfig:
     replan_generations: int = 2
     replan_pop: int = 8
     replan_backend: str = "numpy"
-    # Shard the flat runtime over a silo-axis device mesh (DESIGN.md
-    # §16): None = single device; an int / "auto" / a prebuilt Mesh as
-    # in FLConfig.mesh. The live-swap contract is unchanged — swapped
+    # Shared runtime knobs (fl/options.py): mesh sharding (§16), gossip
+    # collective, metrics/trace. Pass one `RuntimeOptions` or the
+    # legacy kwargs; the live-swap contract is unchanged — swapped
     # schedules are still just new runtime arguments to ONE traced
-    # cycle, now a shard_map program.
+    # cycle, a shard_map program under mesh.
+    options: RuntimeOptions | None = None
     mesh: object = None
     gossip: str = "halo"
+    metrics: object = None
+    trace: str | None = None
 
     def __post_init__(self):
+        adopt_runtime_options(self)
+        if self.metrics is not None:
+            raise ValueError("ControllerConfig does not thread in-scan "
+                             "metrics; use FLConfig(metrics=...) or the "
+                             "recorder= argument of ControllerHarness.run")
         if self.rounds % self.replan_every:
             raise ValueError(
                 f"replan_every={self.replan_every} must divide "
@@ -305,6 +314,14 @@ class ControllerHarness:
 
         cfg = self.cfg
         sc = get_scenario(scenario) if isinstance(scenario, str) else scenario
+        # cfg.trace (RuntimeOptions) with no explicit recorder: record
+        # this run and write the Perfetto trace on return
+        auto_trace = recorder is None and cfg.trace is not None
+        if auto_trace:
+            from repro.obs import TraceRecorder
+            recorder = TraceRecorder()
+            recorder.meta.update(network=cfg.network, rounds=cfg.rounds,
+                                 scenario=str(scenario), adaptive=adaptive)
         policy = DegradePolicy(timeout_ms=sc.timeout_ms,
                                max_stale=sc.max_stale, adaptive=adaptive)
         vec = self.vec0
@@ -375,6 +392,9 @@ class ControllerHarness:
                                              round=session.round,
                                              vector=list(vec))
         acc = float(self._acc_fn(self._get_w(state)))
+        if auto_trace:
+            from repro.obs import write_trace
+            write_trace(cfg.trace, recorder)
         return ControlledRun(
             scenario=sc.schedule.name, adaptive=adaptive,
             losses=np.asarray(losses), cycle_times_ms=np.concatenate(taus),

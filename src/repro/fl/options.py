@@ -1,0 +1,75 @@
+"""Shared runtime options for every FL entry point.
+
+`FLConfig` (fl/trainer.py), `ControllerConfig` (design/controller.py)
+and `TrainConfig` (launch/train.py) used to re-declare the same four
+runtime knobs — device mesh, gossip collective, in-scan metrics, trace
+output — with three slightly drifting docstrings. They now embed ONE
+`RuntimeOptions` value; callers that orchestrate several entry points
+(the serving CLI trains, snapshots, and serves in one process) thread a
+single object instead of re-plumbing four flags per config.
+
+Back-compat contract (`adopt_runtime_options`): the legacy constructor
+kwargs (``mesh=8``, ``gossip="all_gather"``, ``metrics=...``,
+``trace=...``) keep working on all three configs. When both are given,
+an explicitly-set legacy field wins over the embedded object's value —
+which is exactly what makes `dataclasses.replace(cfg, mesh=...)`
+behave: the carried-over ``options`` fills only fields still at their
+dataclass default, then ``options`` is rebuilt canonical so the two
+views never disagree.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeOptions:
+    """Runtime knobs shared by trainer / controller / launch configs.
+
+    mesh    — silo-axis device mesh for the flat runtime (DESIGN.md
+              §16): None = single device (the oracle), an int = that
+              many shards, "auto" = every host device, or a prebuilt
+              1-D jax Mesh.
+    gossip  — mesh-only cross-shard source-row collective: "halo"
+              (ppermute boundary exchange) or "all_gather" (baseline).
+    metrics — an `obs.MetricsSpec` compiled into the whole-cycle scan
+              (DESIGN.md §17); None = off (provably inert).
+    trace   — path for a Perfetto trace-event JSON of the run; None =
+              off.
+    """
+
+    mesh: object = None
+    gossip: str = "halo"
+    metrics: object = None
+    trace: str | None = None
+
+
+_DEFAULTS = RuntimeOptions()
+_FIELDS = tuple(f.name for f in dataclasses.fields(RuntimeOptions))
+
+
+def adopt_runtime_options(cfg) -> None:
+    """Reconcile a config's legacy runtime fields with its embedded
+    ``options``; call from ``__post_init__``.
+
+    ``cfg`` must declare ``options: RuntimeOptions | None`` plus the
+    four legacy fields with the same defaults as `RuntimeOptions`.
+    After the call every legacy field and ``cfg.options`` agree.
+    """
+    # object.__setattr__ so frozen configs (ControllerConfig) can adopt
+    # from __post_init__ exactly like mutable ones.
+    if cfg.options is not None:
+        if isinstance(cfg.options, dict):
+            # JSON round-trip (config_cli.load): dataclasses.asdict
+            # flattened the embedded options into a plain mapping.
+            object.__setattr__(cfg, "options",
+                               RuntimeOptions(**cfg.options))
+        if not isinstance(cfg.options, RuntimeOptions):
+            raise TypeError(f"options must be a RuntimeOptions, got "
+                            f"{type(cfg.options).__name__}")
+        for name in _FIELDS:
+            if getattr(cfg, name) == getattr(_DEFAULTS, name):
+                object.__setattr__(cfg, name, getattr(cfg.options, name))
+    object.__setattr__(cfg, "options", RuntimeOptions(
+        **{n: getattr(cfg, n) for n in _FIELDS}))

@@ -31,6 +31,7 @@ import numpy as np
 from repro.core.delay import WORKLOADS, Workload
 from repro.data.synthetic import FederatedDataset, make_federated_dataset
 from repro.fl import dpasgd
+from repro.fl.options import RuntimeOptions, adopt_runtime_options
 from repro.models.small import SMALL_MODELS, SmallModelSpec
 from repro.networks.zoo import NetworkSpec, get_network
 from repro.optim import sgd
@@ -62,27 +63,31 @@ class FLConfig:
     # "flat" = whole-cycle flat-parameter runtime; "legacy" = per-round
     # stacked-pytree steps (kept as the equivalence oracle).
     runtime: str = "flat"
-    # Flat runtime only: shard silos over a device mesh with a named
-    # "silo" axis (DESIGN.md §16). None = single device (the oracle);
-    # an int = that many shards; "auto" = every device the host
-    # exposes; or a prebuilt 1-D jax Mesh. Bit-for-bit equal state to
-    # mesh=None, and schedule swaps still never recompile.
+    # Shared runtime knobs (fl/options.py): mesh sharding (§16), gossip
+    # collective, in-scan metrics and trace output (§17). Either pass
+    # one `RuntimeOptions` here or keep using the legacy kwargs below —
+    # after construction the two views always agree.
+    options: RuntimeOptions | None = None
     mesh: object = None
-    # Mesh only: cross-shard source-row collective — "halo" (ppermute
-    # exchange of boundary-crossing rows) or "all_gather" (baseline).
     gossip: str = "halo"
+    metrics: object = None
+    trace: str | None = None
     # Multigraph only: explicit multiplicity vector aligned with the
     # Christofides overlay pairs (the design search's exchange format);
     # None = Algorithm 1's assignment at `t`.
     multiplicity: tuple[int, ...] | None = None
-    # Observability (DESIGN.md §17), flat runtime only. `metrics`: an
-    # `obs.MetricsSpec` — the jitted cycle additionally returns per-
-    # round in-scan scalars, surfaced on FLResult.metrics. `trace`: a
-    # path — write a Perfetto trace-event JSON of the run (simulated
-    # per-silo spans + host compile/dispatch/eval spans + metric
-    # counters). Both default off and are provably inert when off.
-    metrics: object = None
-    trace: str | None = None
+    # Periodic checkpointing (checkpoint/ckpt.py): `ckpt_dir` turns it
+    # on; every `ckpt_every` rounds (and at the final round) the
+    # per-silo flat rows + run metadata land as a step-numbered FL
+    # checkpoint the serving fleet can load. Under mesh sharding the
+    # rows are gathered through `gather_flat_state` first, so restores
+    # are bit-identical across device counts. Flat runtime only.
+    ckpt_dir: str | None = None
+    ckpt_every: int = 0
+    ckpt_keep: int = 8
+
+    def __post_init__(self):
+        adopt_runtime_options(self)
 
 
 @dataclasses.dataclass
@@ -161,6 +166,9 @@ def run_fl(cfg: FLConfig) -> FLResult:
     if (cfg.metrics is not None or cfg.trace) and cfg.runtime != "flat":
         raise ValueError("metrics=/trace= need the flat whole-cycle "
                          "runtime (the legacy path has no in-scan hook)")
+    if cfg.ckpt_dir and cfg.runtime != "flat":
+        raise ValueError("ckpt_dir= needs the flat runtime (the flat "
+                         "(N, T) rows ARE the checkpoint format)")
     recorder = None
     if cfg.trace:
         from repro.obs import TraceRecorder
@@ -197,12 +205,43 @@ def run_fl(cfg: FLConfig) -> FLResult:
         eval_params_fn = jax.jit(
             lambda w: flatmod.unravel(rt.spec, jnp.mean(w, axis=0)))
 
+        ckpt_mgr = None
+        if cfg.ckpt_dir:
+            from repro.checkpoint import CheckpointManager, \
+                save_fl_checkpoint
+            ckpt_mgr = CheckpointManager(cfg.ckpt_dir, keep=cfg.ckpt_keep)
+            # the canonical (N, T) rows: a mesh run gathers through
+            # gather_flat_state so pad rows / block-padded edge layout
+            # never leak into the checkpoint — D=8 and D=1 runs save
+            # bit-identical blocks (tests/test_serving_loop.py)
+            if cfg.mesh is not None:
+                ckpt_w = lambda st: flmesh.gather_flat_state(rt, st).w
+            else:
+                ckpt_w = lambda st: st.w
+            cum_ms = np.cumsum(tplan.cycle_times(cfg.rounds))
+
+            def emit_ckpt(k, state):
+                save_fl_checkpoint(
+                    ckpt_mgr, k, ckpt_w(state),
+                    round=k, network=cfg.network, dataset=cfg.dataset,
+                    topology=cfg.topology, t=cfg.t, seed=cfg.seed,
+                    num_silos=n, multiplicity=cfg.multiplicity,
+                    lr=cfg.lr, momentum=cfg.momentum,
+                    alpha=cfg.alpha,
+                    sim_time_ms=float(cum_ms[k - 1]) if k else 0.0,
+                    loss_tail=[float(x) for x in round_losses[-8:]],
+                    eval_accs=[float(x) for x in eval_accs[-4:]])
+
         k = 0
         while k < cfg.rounds:
             # advance a whole cycle per dispatch, splitting at eval
             # boundaries so eval hooks keep per-round granularity
+            # (and at checkpoint boundaries when ckpt_every is set)
             next_stop = min((k // cfg.eval_every + 1) * cfg.eval_every,
                             cfg.rounds)
+            if ckpt_mgr is not None and cfg.ckpt_every > 0:
+                next_stop = min(next_stop,
+                                (k // cfg.ckpt_every + 1) * cfg.ckpt_every)
             chunk = min(r_cycle, next_stop - k)
             per_round = [_sample_round(data, n, cfg, rng)
                          for _ in range(chunk)]
@@ -237,6 +276,14 @@ def run_fl(cfg: FLConfig) -> FLResult:
                     acc = float(acc_fn(eval_params_fn(get_w(state))))
                 eval_rounds.append(k)
                 eval_accs.append(acc)
+            if ckpt_mgr is not None and (
+                    k == cfg.rounds or
+                    (cfg.ckpt_every > 0 and k % cfg.ckpt_every == 0)):
+                if recorder is not None:
+                    with recorder.host_span("checkpoint", round=k):
+                        emit_ckpt(k, state)
+                else:
+                    emit_ckpt(k, state)
     elif cfg.runtime == "legacy":
         if cfg.mesh is not None:
             raise ValueError("mesh= requires runtime='flat'")

@@ -35,6 +35,7 @@ from repro.configs import get_config, reduce as reduce_cfg
 from repro.core.delay import FEMNIST, MultigraphDelayTracker, WORKLOADS
 from repro.data.synthetic import make_lm_dataset
 from repro.fl import dpasgd
+from repro.fl.options import RuntimeOptions, adopt_runtime_options
 from repro.models import transformer as tf
 from repro.models.frontends import prefix_tokens, synthetic_prefix
 from repro.networks.zoo import NetworkSpec, get_network
@@ -61,18 +62,30 @@ class TrainConfig:
     lr: float = 3e-3
     seed: int = 0
     reduced: bool = True
-    # Shard silos over a device mesh (fl/mesh.py): None = legacy
-    # per-round runtime; an int / "auto" / a Mesh runs the whole-cycle
-    # flat runtime sharded on the silo axis (DESIGN.md §16).
+    # Shared runtime knobs (fl/options.py): mesh sharding (None =
+    # legacy per-round runtime; an int / "auto" / a Mesh runs the
+    # whole-cycle flat runtime, DESIGN.md §16), gossip collective, and
+    # trace output. Pass one `RuntimeOptions` or the legacy kwargs.
+    options: RuntimeOptions | None = None
     mesh: object = None
+    gossip: str = "halo"
+    metrics: object = None
+    trace: str | None = None
     # Mesh path only: rank > 0 trains LoRA deltas over a frozen shared
     # base (fl/lora.py) so per-silo state is T_lora, not T_full.
     lora_rank: int = 0
-    gossip: str = "halo"
-    # Write a Perfetto trace-event JSON of the run (obs/, DESIGN.md
-    # §17): simulated per-silo timeline from the schedule's TimingPlan
-    # + host wall-clock spans around each compile/dispatch. None = off.
-    trace: str | None = None
+    # Periodic FL checkpoints (checkpoint/ckpt.py): per-silo flat rows
+    # (the LoRA delta rows when lora_rank > 0) + metadata every
+    # ckpt_every rounds and at the end; the serving fleet loads them.
+    ckpt_dir: str | None = None
+    ckpt_every: int = 0
+    ckpt_keep: int = 8
+
+    def __post_init__(self):
+        adopt_runtime_options(self)
+        if self.metrics is not None:
+            raise ValueError("TrainConfig does not thread in-scan "
+                             "metrics; use FLConfig(metrics=...)")
 
 
 def run_reduced_fl(cfg: TrainConfig) -> dict:
@@ -116,6 +129,29 @@ def run_reduced_fl(cfg: TrainConfig) -> dict:
     losses = []
     r_cycle = plan.num_rounds_cycle
     t0 = time.time()
+    ckpt_mgr = None
+    ckpt_w = None  # set per-path: state -> gathered (N, T) flat rows
+    if cfg.ckpt_dir:
+        from repro.checkpoint import CheckpointManager
+        ckpt_mgr = CheckpointManager(cfg.ckpt_dir, keep=cfg.ckpt_keep)
+        ckpt_cum_ms = np.cumsum(tplan.cycle_times(cfg.rounds))
+
+    def emit_ckpt(k, state):
+        from repro.checkpoint import save_fl_checkpoint
+        span = (recorder.host_span("checkpoint", round=k)
+                if recorder is not None else contextlib.nullcontext())
+        with span:
+            save_fl_checkpoint(
+                ckpt_mgr, k, ckpt_w(state),
+                round=k, arch=cfg.arch, network=cfg.network,
+                dataset="synthetic-lm", workload="femnist",
+                topology=cfg.topology, t=cfg.t, seed=cfg.seed,
+                num_silos=n, lora_rank=cfg.lora_rank,
+                params_kind="lora_delta" if cfg.lora_rank else "full",
+                seq_len=cfg.seq_len, lr=cfg.lr,
+                sim_time_ms=float(ckpt_cum_ms[k - 1]) if k else 0.0,
+                loss_tail=[float(x) for x in losses[-8:]])
+
     if cfg.mesh is not None:
         # mesh-sharded whole-cycle flat runtime (DESIGN.md §16); with
         # lora_rank > 0 the trainable per-silo state is the LoRA delta
@@ -138,9 +174,17 @@ def run_reduced_fl(cfg: TrainConfig) -> dict:
         state = flmesh.init_mesh_state(init_fn, opt, mrt, key)
         cycle = flrt.make_cycle_fn(mrt, loss_fn=cycle_loss, opt=opt,
                                    gossip=cfg.gossip)
+        if ckpt_mgr is not None:
+            # canonical single-device layout: drop pad rows, restore
+            # dst-sorted edge order (DESIGN.md §16) so a D=8 run's
+            # checkpoint is bit-identical to the D=1 run's
+            ckpt_w = lambda st: flmesh.gather_flat_state(mrt, st).w
         k = 0
         while k < cfg.rounds:
             chunk = min(r_cycle, cfg.rounds - k)
+            if ckpt_mgr is not None and cfg.ckpt_every > 0:
+                nxt = (k // cfg.ckpt_every + 1) * cfg.ckpt_every
+                chunk = min(chunk, nxt - k)
             toks = np.stack([draw_round() for _ in range(chunk)])
             batches = {"tokens": jnp.asarray(toks[:, None, :, :, :-1]),
                        "labels": jnp.asarray(toks[:, None, :, :, 1:])}
@@ -160,6 +204,10 @@ def run_reduced_fl(cfg: TrainConfig) -> dict:
                 chunk_losses = np.asarray(chunk_losses)
             losses.extend(float(x) for x in chunk_losses)
             k += chunk
+            if ckpt_mgr is not None and (
+                    k == cfg.rounds or
+                    (cfg.ckpt_every > 0 and k % cfg.ckpt_every == 0)):
+                emit_ckpt(k, state)
         # bytes a silo actually communicates per round: the flat row
         # (the LoRA delta when lora_rank > 0, not the frozen base)
         param_bytes = rt.spec.size * 4
@@ -173,6 +221,12 @@ def run_reduced_fl(cfg: TrainConfig) -> dict:
         step = jax.jit(lambda st, batches, s, c, d: dpasgd.fl_round_step(
             st, batches, plan.src, plan.dst, s, c, d,
             loss_fn=loss_fn, opt=opt, local_updates=1))
+        if ckpt_mgr is not None:
+            from repro.fl import flat as flatmod
+            ckpt_spec = flatmod.make_flat_spec(
+                jax.eval_shape(lambda kk: tf.init_params(mcfg, kk), key))
+            ckpt_w = lambda st: flatmod.ravel_stacked(ckpt_spec,
+                                                      st.silo_params)
         for k in range(cfg.rounds):
             toks = draw_round()
             batches = {"tokens": jnp.asarray(toks[None, :, :, :-1]),
@@ -191,6 +245,10 @@ def run_reduced_fl(cfg: TrainConfig) -> dict:
                                    jnp.asarray(plan.diag[pk]))
                 loss = float(loss)
             losses.append(loss)
+            if ckpt_mgr is not None and (
+                    k + 1 == cfg.rounds or
+                    (cfg.ckpt_every > 0 and (k + 1) % cfg.ckpt_every == 0)):
+                emit_ckpt(k + 1, state)
         param_bytes = sum(x.size * x.dtype.itemsize
                           for x in jax.tree.leaves(state.silo_params)) / n
 
@@ -210,6 +268,9 @@ def run_reduced_fl(cfg: TrainConfig) -> dict:
         "sim_mean_cycle_ms": sim.mean_cycle_ms,
         "sim_total_time_s": sim.total_time_s,
     }
+    if ckpt_mgr is not None:
+        out["ckpt_dir"] = str(ckpt_mgr.dir)
+        out["ckpt_steps"] = ckpt_mgr.steps()
     if recorder is not None:
         from repro.obs import write_trace
         recorder.add_sim_spans(tplan, cfg.rounds)
@@ -233,6 +294,11 @@ def main():
                     help="silo shards: an int, 'auto', or unset for the "
                          "legacy per-round runtime")
     ap.add_argument("--lora-rank", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="emit FL checkpoints (per-silo flat rows + "
+                         "metadata) into this directory")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="checkpoint every K rounds (0 = only at the end)")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="write a Perfetto trace-event JSON of the run "
                          "(open at ui.perfetto.dev)")
@@ -250,7 +316,8 @@ def main():
         arch=args.arch, topology=args.topology, network=args.network,
         silos=args.silos, rounds=args.rounds, t=args.t,
         seq_len=args.seq_len, batch_size=args.batch_size, lr=args.lr,
-        mesh=mesh, lora_rank=args.lora_rank, trace=args.trace)
+        mesh=mesh, lora_rank=args.lora_rank, trace=args.trace,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
     out = run_reduced_fl(apply_overrides(cfg, args.overrides))
     out.pop("losses")
     print(json.dumps(out, indent=1))

@@ -1,0 +1,98 @@
+"""Network registry: ONE lookup path for every silo network.
+
+The zoo used to expose a function per network (``zoo.gaia()``,
+``zoo.amazon()``, ...) plus an ad-hoc ``wan<K>`` string hack inside
+``zoo.get_network``. Everything that resolves a ``network: str`` config
+field — trainer, sweep, controller, launch, the serving fleet — now
+goes through this module instead:
+
+    get_network("gaia")                      # fixed entry
+    get_network("gaia", capacity_gbps=25.0)  # builder override
+    get_network("wan64")                     # pattern entry -> wan(64)
+    list_networks()                          # concrete names
+    list_networks(include_patterns=True)     # + pattern templates
+
+Two kinds of entries:
+
+  * **fixed** — ``register(name, builder)``; the builder takes only
+    keyword overrides (``capacity_gbps=...``).
+  * **pattern** — ``register_pattern(regex, template, builder)``; the
+    builder additionally receives the ``re.Match`` so parameterized
+    families (``wan64`` -> ``wan(n=64)``) register once and generated
+    WANs of any size share the same lookup path as the paper networks.
+
+The old ``zoo.gaia()``-style callables survive as thin deprecated
+shims that resolve through here, so external code keeps working while
+new code (fleet/traffic/search) never learns the per-network surface.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable
+
+from repro.networks import zoo
+
+_FIXED: dict[str, Callable[..., zoo.NetworkSpec]] = {}
+_PATTERNS: list["_Pattern"] = []
+
+
+@dataclasses.dataclass(frozen=True)
+class _Pattern:
+    regex: re.Pattern
+    template: str            # human-readable, e.g. "wan<K>"
+    builder: Callable[..., zoo.NetworkSpec]
+
+
+def register(name: str, builder: Callable[..., zoo.NetworkSpec],
+             *, overwrite: bool = False) -> None:
+    """Register a fixed network under ``name``."""
+    if name in _FIXED and not overwrite:
+        raise ValueError(f"network {name!r} already registered")
+    _FIXED[name] = builder
+
+
+def register_pattern(regex: str, template: str,
+                     builder: Callable[..., zoo.NetworkSpec]) -> None:
+    """Register a parameterized family. ``builder(match, **overrides)``
+    receives the anchored ``re.Match`` for the requested name."""
+    _PATTERNS.append(_Pattern(re.compile(regex), template, builder))
+
+
+def list_networks(*, include_patterns: bool = False) -> list[str]:
+    """Sorted concrete names; with ``include_patterns`` the pattern
+    templates (e.g. ``wan<K>``) are appended."""
+    names = sorted(_FIXED)
+    if include_patterns:
+        names += [p.template for p in _PATTERNS]
+    return names
+
+
+def get_network(name: str, **overrides) -> zoo.NetworkSpec:
+    """Resolve ``name`` to a built `NetworkSpec`.
+
+    Fixed entries win over patterns; builder keyword overrides
+    (``capacity_gbps=...``) pass through unchanged.
+    """
+    builder = _FIXED.get(name)
+    if builder is not None:
+        return builder(**overrides)
+    for pat in _PATTERNS:
+        m = pat.regex.fullmatch(name)
+        if m is not None:
+            return pat.builder(m, **overrides)
+    known = ", ".join(list_networks(include_patterns=True))
+    raise KeyError(f"unknown network {name!r}; registered: {known}")
+
+
+# ---------------------------------------------------------------------------
+# Built-in entries: the five paper networks + the generated-WAN family.
+# ---------------------------------------------------------------------------
+
+for _name in ("gaia", "amazon", "geant", "exodus", "ebone"):
+    register(_name, getattr(zoo, f"_make_{_name}"))
+
+register_pattern(
+    r"wan(\d+)", "wan<K>",
+    lambda m, **kw: zoo._make_wan(num_silos=int(m.group(1)), **kw))

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 
 import numpy as np
 
@@ -204,7 +205,7 @@ _PATH_STRETCH = 1.5
 _PER_HOP_MS = 0.5  # equipment / serialization constant
 
 
-def _haversine_km(lat1, lon1, lat2, lon2) -> float:
+def haversine_km(lat1, lon1, lat2, lon2) -> float:
     p1, p2 = math.radians(lat1), math.radians(lat2)
     dp = p2 - p1
     dl = math.radians(lon2 - lon1)
@@ -212,14 +213,26 @@ def _haversine_km(lat1, lon1, lat2, lon2) -> float:
     return 2 * _EARTH_RADIUS_KM * math.asin(math.sqrt(a))
 
 
+_haversine_km = haversine_km
+
+
+def link_latency_ms(lat1, lon1, lat2, lon2) -> float:
+    """One-way WAN latency between two coordinates under the zoo's
+    propagation model (2/3 c fiber, path stretch, per-hop constant) —
+    the same formula `_latency_matrix` applies pairwise. The serving
+    traffic generator uses it for client->region legs that are not
+    silo-to-silo."""
+    km = haversine_km(lat1, lon1, lat2, lon2)
+    return km * _PATH_STRETCH / _KM_PER_MS + _PER_HOP_MS
+
+
 def _latency_matrix(sites: list[tuple[str, float, float]]) -> np.ndarray:
     n = len(sites)
     lat = np.zeros((n, n))
     for i in range(n):
         for j in range(i + 1, n):
-            km = _haversine_km(sites[i][1], sites[i][2], sites[j][1], sites[j][2])
-            ms = km * _PATH_STRETCH / _KM_PER_MS + _PER_HOP_MS
-            lat[i, j] = lat[j, i] = ms
+            lat[i, j] = lat[j, i] = link_latency_ms(
+                sites[i][1], sites[i][2], sites[j][1], sites[j][2])
     return lat
 
 
@@ -260,34 +273,34 @@ def _build(name: str, sites, *, capacity_gbps: float, hetero_seed: int,
     return NetworkSpec(name=name, silos=silos, latency_ms=_latency_matrix(list(sites)))
 
 
-def gaia(capacity_gbps: float = 10.0) -> NetworkSpec:
+def _make_gaia(capacity_gbps: float = 10.0) -> NetworkSpec:
     return _build("gaia", _GAIA_SITES, capacity_gbps=capacity_gbps,
                   hetero_seed=11, capacity_jitter=0.25, compute_jitter=0.20)
 
 
-def amazon(capacity_gbps: float = 10.0) -> NetworkSpec:
+def _make_amazon(capacity_gbps: float = 10.0) -> NetworkSpec:
     return _build("amazon", _AMAZON_SITES, capacity_gbps=capacity_gbps,
                   hetero_seed=22, capacity_jitter=0.25, compute_jitter=0.20)
 
 
-def geant(capacity_gbps: float = 10.0) -> NetworkSpec:
+def _make_geant(capacity_gbps: float = 10.0) -> NetworkSpec:
     return _build("geant", _GEANT_SITES, capacity_gbps=capacity_gbps,
                   hetero_seed=40, capacity_jitter=0.25, compute_jitter=0.20)
 
 
-def exodus(capacity_gbps: float = 10.0) -> NetworkSpec:
+def _make_exodus(capacity_gbps: float = 10.0) -> NetworkSpec:
     sites = _expand_metros(_EXODUS_METROS, 79, seed=79)
     return _build("exodus", sites, capacity_gbps=capacity_gbps,
                   hetero_seed=79, capacity_jitter=0.25, compute_jitter=0.20)
 
 
-def ebone(capacity_gbps: float = 10.0) -> NetworkSpec:
+def _make_ebone(capacity_gbps: float = 10.0) -> NetworkSpec:
     sites = _expand_metros(_EBONE_METROS, 87, seed=87)
     return _build("ebone", sites, capacity_gbps=capacity_gbps,
                   hetero_seed=87, capacity_jitter=0.25, compute_jitter=0.20)
 
 
-def wan(num_silos: int = 64, capacity_gbps: float = 10.0) -> NetworkSpec:
+def _make_wan(num_silos: int = 64, capacity_gbps: float = 10.0) -> NetworkSpec:
     """Generated planetary WAN with `num_silos` sites — not a paper
 
     network, but the same latency model over the union of the real
@@ -303,6 +316,54 @@ def wan(num_silos: int = 64, capacity_gbps: float = 10.0) -> NetworkSpec:
                   compute_jitter=0.20)
 
 
+# ---------------------------------------------------------------------------
+# Registry delegation (repro/networks/registry.py owns the lookup path).
+# The per-network callables below are DEPRECATED shims kept for external
+# code; new code should use `registry.get_network(name, **overrides)` /
+# `registry.list_networks()` — all `network: str` config fields resolve
+# through the registry, so generated families (wan<K>) and any networks
+# registered by downstream code share one lookup path.
+# ---------------------------------------------------------------------------
+
+
+def get_network(name: str, capacity_gbps: float = 10.0) -> NetworkSpec:
+    """Resolve a network name via the registry (back-compat entry
+    point; identical to `registry.get_network`)."""
+    from repro.networks import registry
+    return registry.get_network(name, capacity_gbps=capacity_gbps)
+
+
+def _deprecated_shim(name: str):
+    def build(capacity_gbps: float = 10.0) -> NetworkSpec:
+        warnings.warn(
+            f"repro.networks.zoo.{name}() is deprecated; use "
+            f"repro.networks.registry.get_network({name!r})",
+            DeprecationWarning, stacklevel=2)
+        return get_network(name, capacity_gbps=capacity_gbps)
+    build.__name__ = name
+    build.__qualname__ = name
+    build.__doc__ = (f"Deprecated: use registry.get_network({name!r}, "
+                     "**overrides).")
+    return build
+
+
+gaia = _deprecated_shim("gaia")
+amazon = _deprecated_shim("amazon")
+geant = _deprecated_shim("geant")
+exodus = _deprecated_shim("exodus")
+ebone = _deprecated_shim("ebone")
+
+
+def wan(num_silos: int = 64, capacity_gbps: float = 10.0) -> NetworkSpec:
+    """Deprecated: use registry.get_network(f"wan{K}", **overrides)."""
+    warnings.warn("repro.networks.zoo.wan(n) is deprecated; use "
+                  "repro.networks.registry.get_network(f'wan{n}')",
+                  DeprecationWarning, stacklevel=2)
+    return get_network(f"wan{num_silos}", capacity_gbps=capacity_gbps)
+
+
+#: Deprecated name->builder map (iteration order preserved); prefer
+#: `registry.list_networks()`.
 NETWORKS = {
     "gaia": gaia,
     "amazon": amazon,
@@ -310,13 +371,3 @@ NETWORKS = {
     "exodus": exodus,
     "ebone": ebone,
 }
-
-
-def get_network(name: str, capacity_gbps: float = 10.0) -> NetworkSpec:
-    if name.startswith("wan") and name[3:].isdigit():
-        return wan(int(name[3:]), capacity_gbps)
-    try:
-        return NETWORKS[name](capacity_gbps)
-    except KeyError:
-        raise KeyError(f"unknown network {name!r}; have {sorted(NETWORKS)} "
-                       "or wan<K> (generated)") from None

@@ -9,6 +9,8 @@ a phase `ph`: "X" complete spans (ts/dur, microseconds), "C" counters,
                          tracks from the in-scan metrics
   pid 2  "host"        — wall-clock compile/dispatch/eval spans
   pid 3  "controller"  — observe/replan/swap instants
+  pid 4  "serving"     — request lifetimes, one thread per region
+                         (only present when the fleet recorded any)
 
 `validate_trace` enforces the subset we emit (well-formed phases,
 non-negative durations, per-track monotone timestamps) — it's what
@@ -23,6 +25,7 @@ from typing import Any
 SIM_PID = 1
 HOST_PID = 2
 CTRL_PID = 3
+SERVE_PID = 4
 
 
 def _meta(pid: int, name: str, sort: int) -> list[dict]:
@@ -45,6 +48,19 @@ def to_trace_json(rec, *, extra_meta: dict | None = None) -> dict:
     ev += _meta(SIM_PID, "simulated", 0)
     ev += _meta(HOST_PID, "host", 1)
     ev += _meta(CTRL_PID, "controller", 2)
+    if rec.serve_events:
+        ev += _meta(SERVE_PID, "serving", 3)
+        regions = sorted({e["region"] for e in rec.serve_events})
+        tid_of = {r: i + 1 for i, r in enumerate(regions)}
+        for r, tid in tid_of.items():
+            ev.append({"ph": "M", "pid": SERVE_PID, "tid": tid,
+                       "name": "thread_name", "args": {"name": r}})
+        for e in rec.serve_events:
+            ev.append({"ph": "X", "pid": SERVE_PID,
+                       "tid": tid_of[e["region"]],
+                       "name": e["name"], "cat": "serve",
+                       "ts": e["t0_ms"] * 1e3, "dur": e["dur_ms"] * 1e3,
+                       "args": {"region": e["region"], **e["args"]}})
 
     silos = sorted({e["silo"] for e in rec.sim_events})
     for i in silos:
@@ -148,7 +164,7 @@ def write_trace(path, rec, *, extra_meta: dict | None = None) -> dict:
 # JSONL run-record: one event per line, replayable into a recorder
 # ---------------------------------------------------------------------------
 
-_KINDS = ("sim", "host", "ctrl", "counter", "meta")
+_KINDS = ("sim", "host", "ctrl", "counter", "serve", "meta")
 
 
 def run_record_rows(rec) -> list[dict]:
@@ -157,6 +173,7 @@ def run_record_rows(rec) -> list[dict]:
     rows += [{"kind": "counter", **e} for e in rec.counter_events]
     rows += [{"kind": "ctrl", **e} for e in rec.ctrl_events]
     rows += [{"kind": "host", **e} for e in rec.host_events]
+    rows += [{"kind": "serve", **e} for e in rec.serve_events]
     return rows
 
 
@@ -192,6 +209,8 @@ def load_run_record(path):
                 rec.counter_events.append({"clock": "sim", **row})
             elif kind == "ctrl":
                 rec.ctrl_events.append({"clock": "ctrl", **row})
+            elif kind == "serve":
+                rec.serve_events.append({"clock": "serve", **row})
             else:
                 rec.host_events.append({"clock": "host", **row})
     return rec

@@ -49,6 +49,7 @@ class TraceRecorder:
     host_events: list = dataclasses.field(default_factory=list)
     ctrl_events: list = dataclasses.field(default_factory=list)
     counter_events: list = dataclasses.field(default_factory=list)
+    serve_events: list = dataclasses.field(default_factory=list)
     meta: dict = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
@@ -68,6 +69,18 @@ class TraceRecorder:
             self.host_events.append({
                 "clock": "host", "name": name, "t0_ms": t0,
                 "dur_ms": self.host_now_ms() - t0, "args": args})
+
+    # ---- serving clock ----------------------------------------------
+    def request_span(self, name: str, *, t0_ms: float, dur_ms: float,
+                     region: str, **args: Any) -> None:
+        """One request's lifetime on the SERVING simulated clock (the
+        traffic generator's tick clock, ms from serve start): generated
+        at the client at `t0_ms`, last token back at `t0_ms + dur_ms`.
+        Exported on its own Perfetto process, one track per region
+        (serving/traffic.py)."""
+        self.serve_events.append({
+            "clock": "serve", "name": name, "t0_ms": float(t0_ms),
+            "dur_ms": float(dur_ms), "region": str(region), "args": args})
 
     # ---- controller events ------------------------------------------
     def instant(self, name: str, *, t_ms: float, round: int | None = None,
@@ -215,7 +228,8 @@ class TraceRecorder:
         sim = sorted(self.sim_events + self.ctrl_events +
                      self.counter_events, key=key)
         host = sorted(self.host_events, key=lambda e: e["t0_ms"])
-        return sim + host
+        serve = sorted(self.serve_events, key=lambda e: e["t0_ms"])
+        return sim + host + serve
 
     def round_end_ms(self, rnd: int) -> float:
         """Simulated end time of a round (max wait-span end)."""

@@ -1,3 +1,11 @@
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.fleet import (REGION_ANCHORS, Region, RegionalFleet,
+                                 assign_regions, nearest_region)
+from repro.serving.traffic import (LoadResult, RequestRecord,
+                                   TrafficConfig, generate_requests,
+                                   simulate, sweep_loads)
 
-__all__ = ["Request", "ServingEngine"]
+__all__ = ["Request", "ServingEngine", "RegionalFleet", "Region",
+           "REGION_ANCHORS", "assign_regions", "nearest_region",
+           "TrafficConfig", "RequestRecord", "LoadResult",
+           "generate_requests", "simulate", "sweep_loads"]

@@ -80,12 +80,26 @@ class ServingEngine:
         self._rid = itertools.count()
         self.completed: list[Request] = []
 
+        self._dtype = dtype
         state = tf.init_decode_state(cfg, max_slots, max_seq, dtype=dtype)
         self.caches = state.caches
         self.positions = np.zeros((max_slots,), np.int32)
         self._step = jax.jit(
             lambda p, t, s: tf.decode_step(p, cfg, t, s))
         self._sample = sample or (lambda logits: jnp.argmax(logits, -1))
+
+    def reset(self) -> None:
+        """Drop every queued/active/completed request and zero the
+        decode state; the jitted decode step survives, so a load sweep
+        (serving/traffic.py) pays compilation once per engine."""
+        self.slots = [_Slot() for _ in range(self.max_slots)]
+        self.queue.clear()
+        self.completed = []
+        self._rid = itertools.count()
+        state = tf.init_decode_state(self.cfg, self.max_slots,
+                                     self.max_seq, dtype=self._dtype)
+        self.caches = state.caches
+        self.positions = np.zeros((self.max_slots,), np.int32)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> int:

@@ -1,0 +1,25 @@
+"""FL-checkpoint round-trip at D=8: run in a SUBPROCESS with 8 forced
+host devices (tests/test_serving_loop.py drives this; the main pytest
+process must keep seeing 1 device). Trains the reduced-LM FL loop on
+the mesh runtime sharded over 8 devices and emits a checkpoint; the
+parent compares it bit-for-bit against its own single-device run —
+the gather-before-save contract of checkpoint/ckpt.py."""
+
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+
+from repro.launch.train import TrainConfig, run_reduced_fl  # noqa: E402
+
+assert jax.device_count() == 8, jax.device_count()
+
+out = run_reduced_fl(TrainConfig(
+    arch="mamba2-370m", network="gaia", silos=6, rounds=2, t=2,
+    seq_len=16, batch_size=2, mesh="auto",
+    ckpt_dir=sys.argv[1], ckpt_every=0))
+print("d8-ckpt-steps:", out["ckpt_steps"])
+print("d8-mesh-ckpt-ok")
